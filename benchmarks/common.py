@@ -1,0 +1,60 @@
+"""Shared benchmark helpers: PI index drivers + timing + CSV output.
+
+Paper-fidelity note: sizes are scaled to this container (1 CPU core, no
+TPU): dataset sizes default to 2^14..2^18 instead of 2M..256M, and the
+reported metric is query throughput (queries/s), matching the paper's
+y-axes.  Trends (the paper's claims) are what we validate; absolute Xeon
+numbers are out of scope by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import data as data_mod
+from repro.core import (PIConfig, build, execute, maybe_rebuild, range_agg)
+
+
+def make_index(n_keys: int, fanout: int = 8, seed: int = 0,
+               headroom: float = 2.0):
+    cfg = PIConfig(
+        capacity=int(n_keys * headroom),
+        pending_capacity=max(8192 * 4, int(0.25 * n_keys)),
+        fanout=fanout)
+    ycfg = data_mod.YCSBConfig(n_keys=n_keys, seed=seed)
+    keys, vals = data_mod.ycsb_dataset(ycfg)
+    return build(cfg, jnp.asarray(keys), jnp.asarray(vals)), keys, ycfg
+
+
+@jax.jit
+def _one_batch(idx, ops, keys, vals):
+    idx, res = execute(idx, ops, keys, vals)
+    return maybe_rebuild(idx), res
+
+
+def run_query_stream(idx, ycfg, keys, n_batches: int, warmup: int = 2):
+    """Throughput of a YCSB query stream (queries/s)."""
+    batches = [data_mod.ycsb_batch(ycfg, keys, step) for step in
+               range(n_batches + warmup)]
+    batches = [tuple(jnp.asarray(a) for a in b) for b in batches]
+    for b in batches[:warmup]:
+        idx, res = _one_batch(idx, *b)
+    jax.block_until_ready(res)
+    t0 = time.perf_counter()
+    for b in batches[warmup:]:
+        idx, res = _one_batch(idx, *b)
+    jax.block_until_ready(res)
+    dt = time.perf_counter() - t0
+    qps = ycfg.batch * n_batches / dt
+    return qps, idx
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

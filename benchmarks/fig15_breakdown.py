@@ -1,0 +1,74 @@
+"""Fig. 15: per-optimization breakdown.
+
+Paper optimizations → PI-JAX analogues:
+  SIMD entries (M-key vector compare)  → fanout/entry width (F=2 ≈ scalar
+                                         binary descent, F=8 ≈ VPU entry)
+  NUMA-aware partitioning              → 8-shard shard_map index
+  group query processing + prefetch    → batch size (64 → 8192): sorted
+                                         batches amortize descent locality
+The cumulative ladder mirrors the paper's bars.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit, make_index, run_query_stream
+
+NUMA_SCRIPT = r"""
+import json, time, numpy as np, jax, jax.numpy as jnp
+from repro.core import PIConfig, build_sharded, make_sharded_executor
+from repro import data as data_mod
+S, N = 8, {N}
+cfg = PIConfig(capacity=2*N//S, pending_capacity=max(1024, N//S//4), fanout=8)
+ycfg = data_mod.YCSBConfig(n_keys=N, batch=8192)
+keys, vals = data_mod.ycsb_dataset(ycfg)
+state = build_sharded(cfg, S, keys, vals)
+mesh = jax.make_mesh((S,), ("data",))
+run, cap = make_sharded_executor(mesh, cfg, 8192 // S)
+mk = lambda s: tuple(jnp.asarray(a) for a in data_mod.ycsb_batch(ycfg, keys, s))
+shards, fences = state.shards, state.fences
+for s in range(2):
+    shards, f, vv, load, drop = run(shards, fences, *mk(s))
+jax.block_until_ready(f)
+t0 = time.perf_counter()
+for s in range(2, 10):
+    shards, f, vv, load, drop = run(shards, fences, *mk(s))
+jax.block_until_ready(f)
+print(json.dumps({"qps": 8192*8/(time.perf_counter()-t0)}))
+"""
+
+
+def main(n_keys=1 << 16, n_batches=8):
+    rows = []
+    # 1) baseline: narrow entries (scalar-compare analogue), small batches
+    idx, keys, ycfg = make_index(n_keys, fanout=2)
+    small = dataclasses.replace(ycfg, batch=64)
+    qps, _ = run_query_stream(idx, small, keys, n_batches * 4)
+    rows.append(("fig15", "base_F2_b64", round(qps)))
+    # 2) + batching/group processing (paper §4.3.4), still narrow entries
+    qps, _ = run_query_stream(idx, ycfg, keys, n_batches)
+    rows.append(("fig15", "+batch_8192_F2", round(qps)))
+    # 3) + SIMD-width entries (one 8-key vector compare per level)
+    idx, keys, ycfg = make_index(n_keys, fanout=8)
+    qps, _ = run_query_stream(idx, ycfg, keys, n_batches)
+    rows.append(("fig15", "+simd_F8", round(qps)))
+    # 4) + NUMA sharding (8 shards)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c",
+                          NUMA_SCRIPT.replace("{N}", str(n_keys))],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    if out.returncode == 0:
+        r = json.loads(out.stdout.strip().splitlines()[-1])
+        rows.append(("fig15", "+numa_8shards", round(r["qps"])))
+    else:
+        rows.append(("fig15", "+numa_8shards", "ERROR"))
+    return emit(rows, ("fig", "config", "qps"))
+
+
+if __name__ == "__main__":
+    main()

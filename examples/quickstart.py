@@ -1,0 +1,59 @@
+"""Quickstart: build a PI index, run mixed batches, range queries, rebuild.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DELETE, INSERT, SEARCH, PIConfig, build, execute,
+                        lookup, maybe_rebuild, needs_rebuild, range_agg)
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # --- build from an initial dataset (paper §3.1: bottom-up O(n)) ------
+    cfg = PIConfig(capacity=1 << 16, pending_capacity=1 << 12, fanout=8)
+    keys = rng.choice(1 << 20, size=20_000, replace=False).astype(np.int32)
+    vals = np.arange(20_000, dtype=np.int32)
+    index = build(cfg, jnp.asarray(keys), jnp.asarray(vals))
+    print(f"built index: {int(index.n)} keys, "
+          f"{cfg.num_levels} index-layer levels, fanout {cfg.fanout}")
+
+    # --- one sorted mixed batch (paper Alg. 1: the unit of work) ---------
+    B = 1024
+    ops = rng.integers(0, 3, B).astype(np.int32)     # SEARCH/INSERT/DELETE
+    qkeys = rng.choice(keys, B).astype(np.int32)
+    qvals = rng.integers(0, 1 << 20, B).astype(np.int32)
+    index, (found, val) = execute(index, jnp.asarray(ops),
+                                  jnp.asarray(qkeys), jnp.asarray(qvals))
+    n_hit = int(found.sum())
+    print(f"batch of {B}: {n_hit} non-null results, "
+          f"pending inserts={int(index.pn)}")
+
+    # --- point lookups ----------------------------------------------------
+    f, v = lookup(index, jnp.asarray(keys[:4]))
+    print("lookup", keys[:4].tolist(), "->",
+          [int(x) if ok else None for ok, x in zip(np.asarray(f),
+                                                   np.asarray(v))])
+
+    # --- range aggregate (paper §3.2.5) -----------------------------------
+    lo = jnp.asarray(np.array([0, 1 << 18], np.int32))
+    hi = jnp.asarray(np.array([1 << 18, 1 << 19], np.int32))
+    cnt, sm = range_agg(index, lo, hi, 4096)
+    print("range counts:", np.asarray(cnt).tolist())
+
+    # --- deferred rebuild (paper §4.3.5 daemon) ----------------------------
+    newk = (rng.choice(1 << 20, size=4000, replace=False) + (1 << 21)) \
+        .astype(np.int32)
+    index, _ = execute(index,
+                       jnp.full((4000,), INSERT, jnp.int32),
+                       jnp.asarray(newk),
+                       jnp.asarray(np.arange(4000, dtype=np.int32)))
+    print("needs_rebuild:", bool(needs_rebuild(index)))
+    index = maybe_rebuild(index)
+    print(f"after rebuild: n={int(index.n)}, pending={int(index.pn)}")
+
+
+if __name__ == "__main__":
+    main()

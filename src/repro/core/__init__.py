@@ -1,0 +1,34 @@
+"""PI core — the paper's contribution: a latch-free batched skip-list index.
+
+Public surface:
+  PIConfig, PIIndex, build, empty, execute, lookup, traverse, rebuild,
+  maybe_rebuild, range_agg, search/insert/delete_batch   (single shard)
+  ShardedPIIndex, build_sharded, execute_sharded, make_sharded_executor
+  rebalance_from_load / rebalance_from_sample            (NUMA analogue)
+  RefIndex                                               (oracle)
+"""
+from repro.core.batch import SEARCH, INSERT, DELETE
+from repro.core.index import (
+    PIConfig, PIIndex, build, empty, execute, execute_impl, lookup, traverse,
+    rebuild, maybe_rebuild, needs_rebuild, range_agg, search_batch,
+    insert_batch, delete_batch,
+)
+from repro.core.distributed import (
+    ShardedPIIndex, build_sharded, execute_sharded, make_sharded_executor,
+    rebuild_sharded, collect_pairs, dispatch_plan, scatter_to_buffer,
+)
+from repro.core.rebalance import (
+    rebalance_from_load, rebalance_from_sample, load_imbalance,
+)
+from repro.core.ref import RefIndex
+
+__all__ = [
+    "SEARCH", "INSERT", "DELETE", "PIConfig", "PIIndex", "build", "empty",
+    "execute", "execute_impl", "lookup", "traverse", "rebuild",
+    "maybe_rebuild", "needs_rebuild", "range_agg", "search_batch",
+    "insert_batch", "delete_batch", "ShardedPIIndex", "build_sharded",
+    "execute_sharded", "make_sharded_executor", "rebuild_sharded",
+    "collect_pairs", "dispatch_plan", "scatter_to_buffer",
+    "rebalance_from_load", "rebalance_from_sample", "load_imbalance",
+    "RefIndex",
+]

@@ -1,0 +1,91 @@
+"""Batch-execution utilities: segmented last-writer scans and compaction.
+
+The paper executes a sorted query batch per-thread, sequentially, so that a
+query observes all earlier-arriving writes to the same key within the batch
+(Alg. 4).  In the data-parallel adaptation this per-thread sequential walk
+becomes a *segmented, right-biased last-write scan* over key segments of the
+sorted batch — an associative operation, so the whole batch resolves in
+O(log B) depth instead of O(B) sequential steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SEARCH, INSERT, DELETE = 0, 1, 2
+
+
+def _seg_combine(a, b):
+    """Associative combine for a segmented right-biased 'last write' scan.
+
+    Each element is (reset, has, val, tomb):
+      reset - True at segment starts (blocks information flow from the left)
+      has   - a write has been seen in the (unblocked) prefix
+      val   - value of the last write
+      tomb  - last write was a delete
+    """
+    a_reset, a_has, a_val, a_tomb = a
+    b_reset, b_has, b_val, b_tomb = b
+    reset = a_reset | b_reset
+    # If b starts a new segment, a's contribution is discarded entirely.
+    has = jnp.where(b_reset, b_has, a_has | b_has)
+    take_b = b_reset | b_has
+    val = jnp.where(take_b, b_val, a_val)
+    tomb = jnp.where(take_b, b_tomb, a_tomb)
+    return reset, has, val, tomb
+
+
+def seg_last_write_scan(newseg, is_write, val, tomb):
+    """Inclusive + exclusive segmented last-write scans.
+
+    Args:
+      newseg:   (B,) bool — True where a new key segment starts.
+      is_write: (B,) bool — query i is an insert or delete.
+      val:      (B,) value written by query i (don't care when not a write).
+      tomb:     (B,) bool — query i is a delete.
+
+    Returns:
+      (inc_has, inc_val, inc_tomb), (exc_has, exc_val, exc_tomb)
+      inc_* : last write in this segment among queries [seg_start .. i]
+      exc_* : last write in this segment among queries [seg_start .. i-1]
+    """
+    elems = (newseg, is_write, val, tomb)
+    _, inc_has, inc_val, inc_tomb = jax.lax.associative_scan(_seg_combine, elems)
+    # Exclusive: shift the inclusive scan right by one; a segment start sees
+    # nothing from its left neighbour.
+    exc_has = jnp.where(newseg, False, jnp.roll(inc_has, 1))
+    exc_val = jnp.roll(inc_val, 1)
+    exc_tomb = jnp.where(newseg, False, jnp.roll(inc_tomb, 1))
+    exc_has = exc_has.at[0].set(False)
+    return (inc_has, inc_val, inc_tomb), (exc_has, exc_val, exc_tomb)
+
+
+def compact(mask, out_size, *arrays, fill_values):
+    """Stable-compact `arrays` rows where `mask` is True into `out_size` slots.
+
+    Returns (count, dropped, compacted_arrays).  Rows beyond out_size are
+    dropped (caller must check `dropped` / trigger a rebuild).
+    """
+    idx = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    if mask.shape[0] == 0:
+        count = jnp.zeros((), jnp.int32)
+    else:
+        count = jnp.max(jnp.where(mask, idx + 1, 0))
+    target = jnp.where(mask, idx, out_size)  # out-of-range => dropped
+    outs = []
+    for arr, fv in zip(arrays, fill_values):
+        out = jnp.full((out_size,) + arr.shape[1:], fv, dtype=arr.dtype)
+        outs.append(out.at[target].set(arr, mode="drop"))
+    dropped = count > out_size
+    return count.astype(jnp.int32), dropped, tuple(outs)
+
+
+def sort_queries(ops, keys, vals):
+    """Stable sort a query batch by key (arrival order breaks ties).
+
+    Returns (perm, sorted_ops, sorted_keys, sorted_vals).  This is the
+    paper's 'query set Q is ordered' precondition (Def. 3) — sorting here
+    rather than at ingest keeps the public API order-agnostic.
+    """
+    perm = jnp.argsort(keys, stable=True)
+    return perm, ops[perm], keys[perm], vals[perm]

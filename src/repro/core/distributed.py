@@ -1,0 +1,253 @@
+"""ShardedPIIndex — the paper's NUMA-aware partitioning on a device mesh.
+
+Paper §4.3.1: the key space is range-partitioned across NUMA nodes; each
+node builds an independent sub-index from its own keys; queries are routed
+to the owning node and processed entirely in local memory.
+
+TPU mapping (DESIGN.md §2):
+
+* NUMA node        → mesh shard along the ``data`` axis
+* per-node index   → one ``PIIndex`` per shard (stacked-leaf pytree)
+* query routing    → bucketize by fence keys + ``jax.lax.all_to_all``
+* QPI hop          → one ICI all_to_all each way (the *only* cross-shard
+                     traffic; execution itself is collective-free, which is
+                     the paper's "no remote memory access" property)
+* self-adjusted threading → capacity-factored dispatch + fence rebalancing
+                     (``core.rebalance``) — TPUs cannot move cores between
+                     shards, so we move the *range boundaries* instead.
+
+The dispatch machinery (sort by destination, capacity-bounded send buffers,
+all_to_all, inverse routing) is deliberately the same shape as an MoE
+token dispatch; ``models/moe.py`` reuses it — the paper's technique as a
+first-class framework feature.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import index as pi
+from repro.core.batch import SEARCH
+
+NOOP_KEY = None  # padding queries use the key-dtype sentinel (max value)
+
+
+# ---------------------------------------------------------------------------
+# generic sorted all_to_all dispatch (shared with models/moe.py)
+# ---------------------------------------------------------------------------
+
+def dispatch_plan(dest: jnp.ndarray, n_dest: int, cap: int,
+                  sort_key: jnp.ndarray | None = None):
+    """Plan a capacity-bounded dispatch of local items to ``n_dest`` buckets.
+
+    Items are stably sorted by (dest, sort_key) — the paper's sorted query
+    batch — then the first ``cap`` items of each destination group survive;
+    the rest overflow (counted, like an MoE capacity drop; the paper's
+    self-adjusted threading would instead grow the thread pool).
+
+    Returns (order, slot, keep, n_dropped):
+      order : (B,) permutation applied before bucketing
+      slot  : (B,) position of sorted item i inside send buffer = dest*cap+r
+      keep  : (B,) mask of items that fit
+    """
+    B = dest.shape[0]
+    if sort_key is not None:
+        # dest-major, key-minor: two-pass stable argsort
+        o1 = jnp.argsort(sort_key, stable=True)
+        o2 = jnp.argsort(dest[o1], stable=True)
+        order = o1[o2]
+    else:
+        order = jnp.argsort(dest, stable=True)
+    d_sorted = dest[order]
+    # rank within destination group: d_sorted is sorted, so each group's
+    # start index is a searchsorted of the group id against itself
+    idx = jnp.arange(B, dtype=jnp.int32)
+    group_start = jnp.searchsorted(d_sorted, d_sorted, side="left")
+    rank = idx - group_start.astype(jnp.int32)
+    keep = rank < cap
+    slot = jnp.where(keep, d_sorted * cap + rank, n_dest * cap)
+    n_dropped = jnp.sum(~keep).astype(jnp.int32)
+    return order, slot, keep, n_dropped
+
+
+def scatter_to_buffer(arr: jnp.ndarray, order: jnp.ndarray, slot: jnp.ndarray,
+                      n_dest: int, cap: int, fill) -> jnp.ndarray:
+    """(B,)→(n_dest, cap) send buffer; dropped items vanish (mode='drop')."""
+    buf = jnp.full((n_dest * cap,) + arr.shape[1:], fill, arr.dtype)
+    buf = buf.at[slot].set(arr[order], mode="drop")
+    return buf.reshape((n_dest, cap) + arr.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# sharded index state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardedPIIndex:
+    """Stacked per-shard PIIndex + replicated fence keys.
+
+    ``shards`` leaves have leading dim S (the data-axis size); ``fences``
+    has S+1 entries with fences[0] = dtype.min and fences[S] = sentinel.
+    Shard s owns keys in [fences[s], fences[s+1]).
+    """
+
+    shards: pi.PIIndex          # stacked: every leaf (S, ...)
+    fences: jnp.ndarray         # (S+1,)
+    n_shards: int
+
+    def live_count(self):
+        return jax.vmap(lambda s: s.live_count)(self.shards)
+
+
+def build_sharded(cfg: pi.PIConfig, n_shards: int, keys, vals,
+                  fences=None) -> ShardedPIIndex:
+    """Host-side build: partition by fences (default: equi-depth) and stack."""
+    keys = np.asarray(keys)
+    vals = np.asarray(vals)
+    order = np.argsort(keys)
+    keys, vals = keys[order], vals[order]
+    kdt = np.dtype(cfg.key_dtype)
+    if fences is None:
+        # equi-depth split of the initial data (paper: even distribution)
+        cuts = [keys[(len(keys) * s) // n_shards] for s in range(1, n_shards)] \
+            if len(keys) else [0] * (n_shards - 1)
+        lo = np.iinfo(kdt).min if np.issubdtype(kdt, np.integer) else -np.inf
+        hi = np.iinfo(kdt).max if np.issubdtype(kdt, np.integer) else np.inf
+        fences = np.array([lo, *cuts, hi], dtype=kdt)
+    fences = np.asarray(fences, dtype=kdt)
+    shard_trees = []
+    for s in range(n_shards):
+        m = (keys >= fences[s]) & (keys < fences[s + 1]) if s + 1 < n_shards \
+            else (keys >= fences[s])
+        shard_trees.append(pi.build(cfg, jnp.asarray(keys[m]),
+                                    jnp.asarray(vals[m])))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *shard_trees)
+    return ShardedPIIndex(shards=stacked, fences=jnp.asarray(fences),
+                          n_shards=n_shards)
+
+
+# ---------------------------------------------------------------------------
+# the shard-local body (runs under shard_map)
+# ---------------------------------------------------------------------------
+
+def _local_execute(shard: pi.PIIndex, fences, ops, qkeys, qvals,
+                   axis_name: str, cap: int):
+    """Route → execute → route back, from one shard's perspective.
+
+    ``shard`` leaves arrive with a leading (1,) block dim from shard_map.
+    """
+    S = jax.lax.axis_size(axis_name)
+    kdt = jnp.dtype(shard.keys.dtype)
+    sent = pi._sentinel(kdt)
+    local = jax.tree.map(lambda x: x[0], shard)
+    b = ops.shape[0]
+
+    # --- outbound routing (paper: route query to owning NUMA node) --------
+    dest = jnp.clip(
+        jnp.searchsorted(fences[1:-1], qkeys.astype(kdt), side="right"),
+        0, S - 1).astype(jnp.int32)
+    order, slot, keep, n_drop = dispatch_plan(dest, S, cap, sort_key=qkeys)
+    send_ops = scatter_to_buffer(ops, order, slot, S, cap, SEARCH)
+    send_keys = scatter_to_buffer(qkeys.astype(kdt), order, slot, S, cap, sent)
+    send_vals = scatter_to_buffer(qvals, order, slot, S, cap, 0)
+    # remember where each slot came from so results can return: the query
+    # in slot[i] is sorted item i == original index order[i]
+    src_pos = jnp.full((S * cap,), -1, jnp.int32).at[slot].set(
+        order.astype(jnp.int32), mode="drop").reshape(S, cap)
+
+    recv_ops = jax.lax.all_to_all(send_ops, axis_name, 0, 0, tiled=False)
+    recv_keys = jax.lax.all_to_all(send_keys, axis_name, 0, 0, tiled=False)
+    recv_vals = jax.lax.all_to_all(send_vals, axis_name, 0, 0, tiled=False)
+
+    # --- local execution (collective-free: the paper's "no remote access")
+    flat = lambda x: x.reshape((S * cap,) + x.shape[2:])
+    new_local, (r_found, r_val) = pi.execute_impl(
+        local, flat(recv_ops), flat(recv_keys), flat(recv_vals))
+
+    # --- inbound routing of results ---------------------------------------
+    rf = jax.lax.all_to_all(r_found.reshape(S, cap), axis_name, 0, 0)
+    rv = jax.lax.all_to_all(r_val.reshape(S, cap), axis_name, 0, 0)
+    src = src_pos.reshape(S * cap)
+    tgt = jnp.where(src >= 0, src, b)
+    out_found = jnp.zeros((b,), bool).at[tgt].set(rf.reshape(-1), mode="drop")
+    out_val = jnp.zeros((b,), jnp.int32).at[tgt].set(rv.reshape(-1),
+                                                     mode="drop")
+    # per-shard load (for self-adjusted rebalancing)
+    load = jnp.sum(recv_keys != sent).astype(jnp.int32)
+    new_shard = jax.tree.map(lambda x: x[None], new_local)
+    return new_shard, out_found, out_val, load[None], n_drop[None]
+
+
+def make_sharded_executor(mesh: Mesh, cfg: pi.PIConfig, batch_per_shard: int,
+                          axis_name: str = "data",
+                          capacity_factor: float = 2.0):
+    """Build the jitted shard_map'd batch executor for a given mesh.
+
+    Returns ``fn(state, ops, keys, vals) -> (state', found, vals, load,
+    dropped)`` where ops/keys/vals are global arrays of shape
+    (S * batch_per_shard,) sharded along ``axis_name``.
+    """
+    S = mesh.shape[axis_name]
+    cap = int(np.ceil(batch_per_shard / S * capacity_factor))
+    spec_state = jax.tree.map(lambda _: P(axis_name), pi.empty(cfg))
+    # fences replicated; batch sharded on arrival
+    body = partial(_local_execute, axis_name=axis_name, cap=cap)
+    mapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(spec_state, P(), P(axis_name), P(axis_name), P(axis_name)),
+        out_specs=(spec_state, P(axis_name), P(axis_name), P(axis_name),
+                   P(axis_name)),
+        check_vma=False)
+
+    @jax.jit
+    def run(state_shards, fences, ops, qkeys, qvals):
+        return mapped(state_shards, fences, ops, qkeys, qvals)
+
+    return run, cap
+
+
+def execute_sharded(state: ShardedPIIndex, mesh: Mesh, ops, qkeys, qvals,
+                    axis_name: str = "data", capacity_factor: float = 2.0):
+    """Convenience one-shot wrapper (builds the executor each call)."""
+    B = ops.shape[0]
+    S = state.n_shards
+    assert B % S == 0, "global batch must divide the shard count"
+    run, _ = make_sharded_executor(
+        mesh, state.shards.config, B // S, axis_name, capacity_factor)
+    shards, found, val, load, dropped = run(
+        state.shards, state.fences, ops, qkeys, qvals)
+    new_state = ShardedPIIndex(shards=shards, fences=state.fences,
+                               n_shards=S)
+    return new_state, (found, val), load, dropped
+
+
+def rebuild_sharded(state: ShardedPIIndex) -> ShardedPIIndex:
+    """Per-shard deferred rebuild — embarrassingly parallel (paper §4.1)."""
+    shards = jax.vmap(pi.rebuild)(state.shards)
+    return ShardedPIIndex(shards=shards, fences=state.fences,
+                          n_shards=state.n_shards)
+
+
+def collect_pairs(state: ShardedPIIndex):
+    """Host-side: pull all live (key, val) pairs (for resharding/tests)."""
+    ks, vs = [], []
+    for s in range(state.n_shards):
+        shard = jax.tree.map(lambda x: np.asarray(x[s]), state.shards)
+        n = int(shard.n)
+        live = ~shard.tomb[:n]
+        ks.append(shard.keys[:n][live])
+        vs.append(shard.vals[:n][live])
+        pn = int(shard.pn)
+        plive = ~shard.ptomb[:pn]
+        ks.append(shard.pkeys[:pn][plive])
+        vs.append(shard.pvals[:pn][plive])
+    k = np.concatenate(ks)
+    v = np.concatenate(vs)
+    order = np.argsort(k)
+    return k[order], v[order]

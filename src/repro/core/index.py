@@ -1,0 +1,440 @@
+"""PIIndex — the paper's two-layer skip-list index, adapted to dense arrays.
+
+Layout (see DESIGN.md §2 for the CPU→TPU mapping):
+
+* **Storage layer**: a sorted key array ``keys[:n]`` (+ ``vals``, tombstone
+  bitmap ``tomb``) padded to static capacity ``C`` with ``KSENT``.  This is
+  the paper's bottom linked list; the linked-list *pointer* is the array
+  successor.  Deletes are tombstones (the paper's ``F_del``), compacted at
+  rebuild time, exactly as in §3.2.3/§4.3.5.
+* **Index layer**: ``levels[l]`` (l = 1..H) holds every ``F**l``-th storage
+  key, contiguous per level (the paper stores each level's entries in one
+  contiguous area, §4.1).  An *entry* is an aligned group of ``F`` keys; the
+  per-entry *routing table* degenerates to rank arithmetic
+  (``child = pos*F + rank``) because levels are dense — same semantics,
+  zero memory.
+* **Pending buffer**: sorted ``pkeys/pvals/ptomb`` of capacity ``PC`` holds
+  keys inserted since the last rebuild (the paper's between-rebuild
+  linked-list inserts: visible to search immediately, invisible to the
+  index layer until the deferred rebuild, §3.2.3).
+
+Everything is a fixed-shape pytree → jit/shard_map friendly.  The batch
+semantics (sorted query set, intra-batch visibility, last-writer-wins) are
+resolved with the segmented scans in ``core.batch`` and validated against
+``core.ref.RefIndex``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.batch import SEARCH, INSERT, DELETE, seg_last_write_scan, sort_queries
+
+KSENT_I32 = jnp.iinfo(jnp.int32).max  # padding key: sorts after every real key
+
+
+def _sentinel(dtype):
+    """Max-value padding key as a *hashable* numpy scalar (static-arg safe)."""
+    import numpy as np
+    dtype = np.dtype(dtype)
+    if np.issubdtype(dtype, np.integer):
+        return dtype.type(np.iinfo(dtype).max)
+    return dtype.type(np.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class PIConfig:
+    """Static geometry of one PI shard.
+
+    fanout F plays the role of both the promotion probability (P = 1/F) and
+    the entry width M: the paper uses P=0.25, M=4 (one 128-bit SSE vector);
+    on TPU an "entry" should fill VPU lanes, so benchmarks also use F=8/16.
+    """
+
+    capacity: int = 1 << 16          # C  — max live+tombstoned storage slots
+    pending_capacity: int = 1 << 12  # PC — max inserts between rebuilds
+    fanout: int = 4                  # F  — keys per entry == 1/P
+    key_dtype: str = "int32"
+    rebuild_frac: float = 0.15       # paper: rebuild after 15% of N updates
+
+    @property
+    def num_levels(self) -> int:
+        """H: number of index-layer levels (levels 1..H above storage)."""
+        h = 0
+        size = self.capacity
+        while size > self.fanout:
+            size = -(-size // self.fanout)
+            h += 1
+        return h
+
+    def level_size(self, lvl: int) -> int:
+        size = self.capacity
+        for _ in range(lvl):
+            size = -(-size // self.fanout)
+        return size
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PIIndex:
+    """One PI shard (one 'NUMA node' in the paper)."""
+
+    # storage layer
+    keys: jnp.ndarray   # (C,)  sorted, KSENT-padded
+    vals: jnp.ndarray   # (C,)  int32 value "pointers"
+    tomb: jnp.ndarray   # (C,)  bool F_del
+    n: jnp.ndarray      # ()    slots in use (live + tombstoned)
+    # index layer (levels 1..H, contiguous per level)
+    levels: Tuple[jnp.ndarray, ...]
+    # pending buffer (storage-layer inserts awaiting rebuild)
+    pkeys: jnp.ndarray  # (PC,) sorted, KSENT-padded
+    pvals: jnp.ndarray
+    ptomb: jnp.ndarray
+    pn: jnp.ndarray     # ()
+    # bookkeeping
+    n_updates: jnp.ndarray  # () inserts+deletes since last rebuild
+    overflow: jnp.ndarray   # () bool — pending buffer overflowed (data loss!)
+    config: PIConfig = dataclasses.field(metadata=dict(static=True))
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        children = (self.keys, self.vals, self.tomb, self.n, self.levels,
+                    self.pkeys, self.pvals, self.ptomb, self.pn,
+                    self.n_updates, self.overflow)
+        return children, self.config
+
+    @classmethod
+    def tree_unflatten(cls, config, children):
+        return cls(*children, config=config)
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def live_count(self) -> jnp.ndarray:
+        idx = jnp.arange(self.keys.shape[0])
+        main = jnp.sum((idx < self.n) & ~self.tomb)
+        pidx = jnp.arange(self.pkeys.shape[0])
+        pend = jnp.sum((pidx < self.pn) & ~self.ptomb)
+        return main + pend
+
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+def _build_levels(cfg: PIConfig, keys: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    """Index layer = every F**l-th storage key, per level, KSENT-padded.
+
+    This is the paper's bottom-up O(N) rebuild (§4.1): one strided gather
+    per level.  Determinism note (DESIGN.md): with contiguous levels the
+    key "height" is a function of rank, not a random draw — the geometry
+    (expected 1/P gap) is identical to the paper's post-rebuild layout.
+    """
+    sent = _sentinel(keys.dtype)
+    levels = []
+    for lvl in range(1, cfg.num_levels + 1):
+        size = cfg.level_size(lvl)
+        stride = cfg.fanout ** lvl
+        src = jnp.arange(size) * stride
+        levels.append(jnp.take(keys, src, mode="fill", fill_value=sent))
+    return tuple(levels)
+
+
+def build(cfg: PIConfig, keys: jnp.ndarray, vals: jnp.ndarray) -> PIIndex:
+    """Build a PI shard from (not necessarily sorted) unique keys."""
+    kdt = jnp.dtype(cfg.key_dtype)
+    sent = _sentinel(kdt)
+    n = keys.shape[0]
+    if n > cfg.capacity:
+        raise ValueError(f"{n} keys > capacity {cfg.capacity}")
+    order = jnp.argsort(keys)
+    keys_s = jnp.full((cfg.capacity,), sent, kdt).at[:n].set(
+        keys.astype(kdt)[order])
+    vals_s = jnp.zeros((cfg.capacity,), jnp.int32).at[:n].set(
+        vals.astype(jnp.int32)[order])
+    pc = cfg.pending_capacity
+    return PIIndex(
+        keys=keys_s,
+        vals=vals_s,
+        tomb=jnp.zeros((cfg.capacity,), bool),
+        n=jnp.array(n, jnp.int32),
+        levels=_build_levels(cfg, keys_s),
+        pkeys=jnp.full((pc,), sent, kdt),
+        pvals=jnp.zeros((pc,), jnp.int32),
+        ptomb=jnp.zeros((pc,), bool),
+        pn=jnp.array(0, jnp.int32),
+        n_updates=jnp.array(0, jnp.int32),
+        overflow=jnp.array(False),
+        config=cfg,
+    )
+
+
+def empty(cfg: PIConfig) -> PIIndex:
+    kdt = jnp.dtype(cfg.key_dtype)
+    return build(cfg, jnp.zeros((0,), kdt), jnp.zeros((0,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# traversal (the paper's Alg. 2 — index-layer BFS descent)
+# ---------------------------------------------------------------------------
+
+def traverse(index: PIIndex, q: jnp.ndarray) -> jnp.ndarray:
+    """Floor positions: largest i with keys[i] <= q, else -1.
+
+    Vectorized Alg. 2: descend level H→1, at each level compare the F keys
+    of the current entry's child group (one "SIMD compare") and take the
+    rank — the routing-table lookup of Fig. 2 done arithmetically.  The
+    returned position is the paper's *interception*, which with dense
+    rank-strided levels is already the exact storage-layer floor (no
+    residual walk; the paper walks an expected (1+P)/2P nodes here).
+    """
+    cfg = index.config
+    F = cfg.fanout
+    sent = _sentinel(index.keys.dtype)
+    q = q.astype(index.keys.dtype)
+
+    # top level: at most F entries -> one vector compare against the whole level
+    top = index.levels[-1] if cfg.num_levels else index.keys
+    rank = jnp.sum(top[None, :] <= q[:, None], axis=1).astype(jnp.int32) - 1
+    pos = jnp.maximum(rank, 0)
+    underflow = rank < 0
+
+    for lvl in range(cfg.num_levels - 1, -1, -1):
+        arr = index.levels[lvl - 1] if lvl >= 1 else index.keys
+        child = pos[:, None] * F + jnp.arange(F, dtype=jnp.int32)[None, :]
+        ck = jnp.take(arr, child, mode="fill", fill_value=sent)
+        r = jnp.sum(ck <= q[:, None], axis=1).astype(jnp.int32) - 1
+        pos = pos * F + jnp.maximum(r, 0)
+
+    return jnp.where(underflow, jnp.int32(-1), pos)
+
+
+def _pending_lookup(index: PIIndex, q: jnp.ndarray):
+    """Binary search of the sorted pending buffer (the 'storage walk' half)."""
+    pc = index.pkeys.shape[0]
+    ppos = jnp.searchsorted(index.pkeys, q.astype(index.pkeys.dtype))
+    ppos_c = jnp.minimum(ppos, pc - 1)
+    hit = (index.pkeys[ppos_c] == q.astype(index.pkeys.dtype)) & (ppos < pc)
+    live = hit & ~index.ptomb[ppos_c] & (ppos_c < index.pn)
+    return ppos_c, hit & (ppos_c < index.pn), live
+
+
+def lookup(index: PIIndex, q: jnp.ndarray):
+    """Batched point lookup → (found, val).  found=False is the paper's null."""
+    pos = traverse(index, q)
+    pos_c = jnp.maximum(pos, 0)
+    main_match = (pos >= 0) & (jnp.take(index.keys, pos_c) ==
+                               q.astype(index.keys.dtype))
+    main_live = main_match & ~jnp.take(index.tomb, pos_c)
+    main_val = jnp.take(index.vals, pos_c)
+    ppos, _, p_live = _pending_lookup(index, q)
+    p_val = jnp.take(index.pvals, ppos)
+    found = main_live | p_live
+    val = jnp.where(p_live, p_val, main_val)
+    return found, jnp.where(found, val, 0)
+
+
+# ---------------------------------------------------------------------------
+# batch execution (Alg. 1 = partition→traverse→redistribute→execute)
+# ---------------------------------------------------------------------------
+
+def execute_impl(index: PIIndex, ops: jnp.ndarray, qkeys: jnp.ndarray,
+                 qvals: jnp.ndarray):
+    """Execute one query batch; returns (new_index, (found, vals)).
+
+    Semantics == core.ref.RefIndex.execute: queries sorted by key (stable on
+    arrival), each query sees earlier-arriving writes to its key segment.
+    The per-thread sequential walk of Alg. 4 becomes a segmented
+    last-writer scan (core.batch); the Alg. 3 ownership handoff is implicit
+    in the functional bulk update — every storage slot is written by exactly
+    one scatter lane (the segment tail), which *is* the paper's
+    "each modified node is owned by exactly one thread" invariant.
+    """
+    cfg = index.config
+    B = ops.shape[0]
+    kdt = index.keys.dtype
+    sent = _sentinel(kdt)
+
+    perm, s_ops, s_keys, s_vals = sort_queries(ops, qkeys.astype(kdt), qvals)
+    newseg = jnp.concatenate(
+        [jnp.ones((1,), bool), s_keys[1:] != s_keys[:-1]])
+    is_write = s_ops != SEARCH
+    is_del = s_ops == DELETE
+    (inc_has, inc_val, inc_tomb), (exc_has, exc_val, exc_tomb) = (
+        seg_last_write_scan(newseg, is_write, s_vals, is_del))
+
+    # --- store state per query (pre-batch view) ---------------------------
+    pos = traverse(index, s_keys)
+    pos_c = jnp.maximum(pos, 0)
+    main_match = (pos >= 0) & (jnp.take(index.keys, pos_c) == s_keys)
+    main_live = main_match & ~jnp.take(index.tomb, pos_c)
+    main_val = jnp.take(index.vals, pos_c)
+    ppos, p_match, p_live = _pending_lookup(index, s_keys)
+    store_found = main_live | p_live
+    store_val = jnp.where(p_live, jnp.take(index.pvals, ppos), main_val)
+
+    # --- per-query results (visibility: exclusive scan > store) -----------
+    vis_found = jnp.where(exc_has, ~exc_tomb, store_found)
+    vis_val = jnp.where(exc_has, exc_val, store_val)
+    r_found = jnp.where(s_ops == SEARCH, vis_found,
+                        jnp.where(is_del, vis_found, False))
+    r_val = jnp.where(s_ops == SEARCH, jnp.where(vis_found, vis_val, 0),
+                      jnp.where(is_del & vis_found, 1, 0))
+
+    inv = jnp.argsort(perm)
+    results = (r_found[inv], r_val[inv])
+
+    # --- net effects: one writer per key segment (segment tails) ----------
+    seg_end = jnp.concatenate([newseg[1:], jnp.ones((1,), bool)])
+    apply_w = seg_end & inc_has
+    # 1) key already in main storage → in-place update (Alg. 4 lines 11-15)
+    upd_main = apply_w & main_match
+    tgt = jnp.where(upd_main, pos_c, cfg.capacity)  # OOB ⇒ dropped
+    vals2 = index.vals.at[tgt].set(
+        jnp.where(inc_tomb, main_val, inc_val), mode="drop")
+    tomb2 = index.tomb.at[tgt].set(inc_tomb, mode="drop")
+    # 2) key in pending buffer → in-place update there
+    upd_pend = apply_w & ~main_match & p_match
+    ptgt = jnp.where(upd_pend, ppos, cfg.pending_capacity)
+    pvals2 = index.pvals.at[ptgt].set(
+        jnp.where(inc_tomb, jnp.take(index.pvals, ppos), inc_val), mode="drop")
+    ptomb2 = index.ptomb.at[ptgt].set(inc_tomb, mode="drop")
+    # 3) brand-new key, net insert → append to pending (sorted merge)
+    new_ins = apply_w & ~main_match & ~p_match & ~inc_tomb
+    addk = jnp.where(new_ins, s_keys, sent)
+    addv = jnp.where(new_ins, inc_val, 0)
+    mk = jnp.concatenate([index.pkeys, addk])
+    mv = jnp.concatenate([pvals2, addv])
+    mt = jnp.concatenate([ptomb2, jnp.zeros((B,), bool)])
+    # hide slots beyond pn so stale tails don't resurrect
+    pidx = jnp.arange(cfg.pending_capacity)
+    mk = mk.at[:cfg.pending_capacity].set(
+        jnp.where(pidx < index.pn, mk[:cfg.pending_capacity], sent))
+    order = jnp.argsort(mk)
+    mk, mv, mt = mk[order], mv[order], mt[order]
+    pn2 = jnp.minimum(index.pn + jnp.sum(new_ins),
+                      cfg.pending_capacity).astype(jnp.int32)
+    overflow2 = index.overflow | (
+        index.pn + jnp.sum(new_ins) > cfg.pending_capacity)
+
+    n_upd = index.n_updates + jnp.sum(apply_w).astype(jnp.int32)
+    new_index = PIIndex(
+        keys=index.keys, vals=vals2, tomb=tomb2, n=index.n,
+        levels=index.levels,
+        pkeys=mk[:cfg.pending_capacity], pvals=mv[:cfg.pending_capacity],
+        ptomb=mt[:cfg.pending_capacity], pn=pn2,
+        n_updates=n_upd, overflow=overflow2, config=cfg)
+    return new_index, results
+
+
+execute = jax.jit(execute_impl, donate_argnums=0)
+
+
+def needs_rebuild(index: PIIndex) -> jnp.ndarray:
+    """Paper §4.3.5: daemon rebuilds after threshold (15% of N) updates."""
+    thresh = jnp.maximum(
+        (index.n.astype(jnp.float32) * index.config.rebuild_frac), 1.0)
+    near_full = index.pn > (index.config.pending_capacity * 3) // 4
+    return (index.n_updates.astype(jnp.float32) >= thresh) | near_full \
+        | index.overflow
+
+
+@jax.jit
+def rebuild(index: PIIndex) -> PIIndex:
+    """Deferred bulk rebuild (paper §4.1/§4.3.5, made a sort+gather).
+
+    Compacts tombstones, merges the pending buffer into the storage array
+    and regenerates every index-layer level bottom-up.  O(N log N) here vs
+    the paper's O(N) — the sort is the price of array storage; it is one
+    fused XLA sort and in the sharded index each shard rebuilds only its
+    range (embarrassingly parallel, as §4.1 notes).
+    """
+    cfg = index.config
+    sent = _sentinel(index.keys.dtype)
+    C, PC = cfg.capacity, cfg.pending_capacity
+    midx = jnp.arange(C)
+    m_live = (midx < index.n) & ~index.tomb
+    pidx = jnp.arange(PC)
+    p_live = (pidx < index.pn) & ~index.ptomb
+    allk = jnp.concatenate([jnp.where(m_live, index.keys, sent),
+                            jnp.where(p_live, index.pkeys, sent)])
+    allv = jnp.concatenate([index.vals, index.pvals])
+    order = jnp.argsort(allk)
+    keys2 = allk[order][:C]
+    vals2 = allv[order][:C]
+    n2 = (jnp.sum(m_live) + jnp.sum(p_live)).astype(jnp.int32)
+    return PIIndex(
+        keys=keys2, vals=vals2, tomb=jnp.zeros((C,), bool), n=n2,
+        levels=_build_levels(cfg, keys2),
+        pkeys=jnp.full((PC,), sent, index.keys.dtype),
+        pvals=jnp.zeros((PC,), jnp.int32),
+        ptomb=jnp.zeros((PC,), bool),
+        pn=jnp.array(0, jnp.int32),
+        n_updates=jnp.array(0, jnp.int32),
+        overflow=jnp.array(False),
+        config=cfg)
+
+
+def maybe_rebuild(index: PIIndex) -> PIIndex:
+    """Branchless 'daemon': rebuild iff the update threshold tripped."""
+    return jax.lax.cond(needs_rebuild(index), rebuild, lambda i: i, index)
+
+
+# ---------------------------------------------------------------------------
+# range queries (paper §3.2.5 / Fig. 14)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=3)
+def range_agg(index: PIIndex, lo: jnp.ndarray, hi: jnp.ndarray,
+              max_span: int = 1024):
+    """Batched range query → (count, sum_of_vals) over keys in [lo, hi].
+
+    Walks up to ``max_span`` storage slots from the interception of ``lo``
+    (the paper's storage-layer scan), plus a broadcast pass over the pending
+    buffer.  ``max_span`` is the benchmark's 'granularity' cap.
+    """
+    kdt = index.keys.dtype
+    lo = lo.astype(kdt)
+    hi = hi.astype(kdt)
+    pos = traverse(index, lo)           # floor(lo): scan starts here
+    start = jnp.maximum(pos, 0)
+    span = start[:, None] + jnp.arange(max_span, dtype=jnp.int32)[None, :]
+    ks = jnp.take(index.keys, span, mode="fill",
+                  fill_value=_sentinel(kdt))
+    ts = jnp.take(index.tomb, span, mode="fill", fill_value=True)
+    vs = jnp.take(index.vals, span, mode="fill", fill_value=0)
+    inr = (ks >= lo[:, None]) & (ks <= hi[:, None]) & ~ts & \
+        (span < index.n)
+    cnt = jnp.sum(inr, axis=1).astype(jnp.int32)
+    sm = jnp.sum(jnp.where(inr, vs, 0), axis=1)
+    # pending buffer: broadcast compare (PC is small between rebuilds)
+    pidx = jnp.arange(index.pkeys.shape[0])
+    plive = (pidx < index.pn) & ~index.ptomb
+    pin = (index.pkeys[None, :] >= lo[:, None]) & \
+        (index.pkeys[None, :] <= hi[:, None]) & plive[None, :]
+    cnt = cnt + jnp.sum(pin, axis=1).astype(jnp.int32)
+    sm = sm + jnp.sum(jnp.where(pin, index.pvals[None, :], 0), axis=1)
+    return cnt, sm
+
+
+# convenience wrappers ------------------------------------------------------
+
+def search_batch(index: PIIndex, keys: jnp.ndarray):
+    ops = jnp.full(keys.shape, SEARCH, jnp.int32)
+    vals = jnp.zeros(keys.shape, jnp.int32)
+    return execute(index, ops, keys, vals)
+
+
+def insert_batch(index: PIIndex, keys: jnp.ndarray, vals: jnp.ndarray):
+    ops = jnp.full(keys.shape, INSERT, jnp.int32)
+    return execute(index, ops, keys, vals)
+
+
+def delete_batch(index: PIIndex, keys: jnp.ndarray):
+    ops = jnp.full(keys.shape, DELETE, jnp.int32)
+    vals = jnp.zeros(keys.shape, jnp.int32)
+    return execute(index, ops, keys, vals)

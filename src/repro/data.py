@@ -1,0 +1,108 @@
+"""Data pipeline: stateless-resumable synthetic LM stream + YCSB-style
+index workloads.
+
+Everything is a pure function of (seed, step, host) → restart/elastic
+resume needs no pipeline state in checkpoints, and straggler reassignment
+(launch/train.py) can hand any host's slice to any other host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int = 32_000
+    seq_len: int = 128
+    global_batch: int = 8
+    seed: int = 0
+    input_mode: str = "tokens"   # tokens | embeddings
+    d_model: int = 0             # for embeddings mode
+
+
+def lm_batch(cfg: DataConfig, step: int, host: int = 0,
+             n_hosts: int = 1) -> Dict[str, jnp.ndarray]:
+    """Deterministic batch for (step, host).  Zipf-ish token marginals so
+    losses behave like text rather than uniform noise."""
+    b = cfg.global_batch // n_hosts
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.key(cfg.seed), step), host)
+    k1, k2 = jax.random.split(key)
+    # zipf via exponentiated uniform: rank ~ u^(-1/s), s≈1.1
+    u = jax.random.uniform(k1, (b, cfg.seq_len + 1), minval=1e-6)
+    ranks = jnp.clip((u ** (-1.0 / 1.1)).astype(jnp.int32), 0,
+                     cfg.vocab - 1)
+    tokens = ranks[:, :-1]
+    labels = ranks[:, 1:]
+    if cfg.input_mode == "embeddings":
+        emb = jax.random.normal(k2, (b, cfg.seq_len, cfg.d_model),
+                                jnp.float32)
+        return {"embeds": emb, "labels": labels}
+    return {"tokens": tokens, "labels": labels}
+
+
+# ---------------------------------------------------------------------------
+# YCSB-style workload for the index benchmarks (paper §6)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class YCSBConfig:
+    n_keys: int = 1 << 20        # dataset size (paper: 2M..256M)
+    key_space: int = 1 << 30
+    batch: int = 8192            # paper default batch size
+    write_ratio: float = 0.0     # fraction of inserts (paper: 0..100%)
+    theta: float = 0.0           # zipfian parameter (paper: 0, 0.5, 0.9)
+    seed: int = 0
+
+
+def ycsb_dataset(cfg: YCSBConfig):
+    rng = np.random.default_rng(cfg.seed)
+    keys = rng.choice(cfg.key_space, size=cfg.n_keys, replace=False) \
+        .astype(np.int32)
+    vals = rng.integers(0, 1 << 30, cfg.n_keys).astype(np.int32)
+    return keys, vals
+
+
+def _zipf_ranks(rng, n, theta, n_items):
+    """Zipfian ranks via inverse-CDF approximation (YCSB's generator)."""
+    if theta <= 0.0:
+        return rng.integers(0, n_items, n)
+    u = rng.random(n)
+    # approximate inverse of the zipf CDF with exponent theta
+    ranks = np.floor(n_items * u ** (1.0 / (1.0 - theta))).astype(np.int64)
+    return np.clip(ranks, 0, n_items - 1)
+
+
+def ycsb_batch(cfg: YCSBConfig, keys: np.ndarray, step: int):
+    """One query batch: ops/keys/vals arrays (sorted-key Zipf access)."""
+    rng = np.random.default_rng((cfg.seed, step))
+    ranks = _zipf_ranks(rng, cfg.batch, cfg.theta, len(keys))
+    # map rank→key through a fixed permutation so hot keys are spread over
+    # the key space (YCSB scrambled zipfian)
+    perm_seed = np.random.default_rng(cfg.seed)
+    # cheap scramble: multiplicative hash of the rank
+    idx = (ranks * 2654435761 % len(keys)).astype(np.int64)
+    qkeys = keys[idx]
+    is_write = rng.random(cfg.batch) < cfg.write_ratio
+    ops = np.where(is_write, 1, 0).astype(np.int32)   # INSERT else SEARCH
+    # half of inserts target new keys (growth), half update existing
+    new_key = is_write & (rng.random(cfg.batch) < 0.5)
+    fresh = rng.integers(0, cfg.key_space, cfg.batch).astype(np.int32)
+    qkeys = np.where(new_key, fresh, qkeys).astype(np.int32)
+    vals = rng.integers(0, 1 << 30, cfg.batch).astype(np.int32)
+    return ops, qkeys, vals
+
+
+def range_batch(cfg: YCSBConfig, keys: np.ndarray, step: int,
+                granularity: int):
+    """Range-query batch: [lo, hi] spans covering ~granularity keys."""
+    rng = np.random.default_rng((cfg.seed, step, granularity))
+    span = int(cfg.key_space / len(keys) * granularity)
+    lo = rng.integers(0, cfg.key_space - span, cfg.batch).astype(np.int32)
+    hi = (lo + span).astype(np.int32)
+    return lo, hi

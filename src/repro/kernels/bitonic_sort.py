@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: bitonic sort of (key, value) query batches.
+
+The paper sorts each incoming query batch before processing (Def. 3) and
+suggests SIMD mergesort [11] for it (§4.2).  The TPU-idiomatic equivalent
+is a bitonic network: every compare-exchange stage is a full-width vector
+op (reshape → compare → select), no data-dependent control flow, so the
+whole sort maps onto the VPU with log²(B) dense stages.
+
+Values ride along with keys (the paper sorts (type, key, value) triplets;
+here the payload is packed into one int32 lane — ops.sort_queries packs
+op/val/arrival-index so ties stay stable).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _stage(keys, vals, stride: int, direction_block: int):
+    """One compare-exchange stage: partners at distance `stride`."""
+    B = keys.shape[0]
+    idx = jnp.arange(B, dtype=jnp.int32)
+    partner = idx ^ stride
+    pk = keys[partner]
+    pv = vals[partner]
+    up = (idx & direction_block) == 0      # ascending block?
+    is_lo = (idx & stride) == 0            # lower half of the pair?
+    # element keeps min if (ascending & lower) | (descending & upper)
+    keep_min = jnp.logical_xor(~up, is_lo)
+    kmin = jnp.minimum(keys, pk)
+    kmax = jnp.maximum(keys, pk)
+    take_self_on_tie = keys == pk          # ties: keep own payload
+    vmin = jnp.where(keys < pk, vals, jnp.where(take_self_on_tie, jnp.minimum(vals, pv), pv))
+    vmax = jnp.where(keys > pk, vals, jnp.where(take_self_on_tie, jnp.maximum(vals, pv), pv))
+    k = jnp.where(keep_min, kmin, kmax)
+    v = jnp.where(keep_min, vmin, vmax)
+    return k, v
+
+
+def _bitonic_kernel(k_ref, v_ref, ko_ref, vo_ref, *, log_b: int):
+    keys = k_ref[...]
+    vals = v_ref[...]
+    for stage in range(log_b):
+        direction_block = 1 << (stage + 1)
+        for sub in range(stage, -1, -1):
+            keys, vals = _stage(keys, vals, 1 << sub, direction_block)
+    ko_ref[...] = keys
+    vo_ref[...] = vals
+
+
+def bitonic_sort(keys: jnp.ndarray, vals: jnp.ndarray, *,
+                 interpret: bool = False):
+    """Sort a power-of-two batch of (key, value) pairs ascending by key.
+
+    Ties on key are resolved ascending by value — pack the arrival index
+    into the low bits of ``vals`` for the paper's stable ordering (Def. 3).
+    """
+    B = keys.shape[0]
+    log_b = int(np.log2(B))
+    assert 1 << log_b == B, f"bitonic sort needs power-of-two batch, got {B}"
+    kernel = functools.partial(_bitonic_kernel, log_b=log_b)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((B,), lambda i: (0,)),
+                  pl.BlockSpec((B,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((B,), lambda i: (0,)),
+                   pl.BlockSpec((B,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((B,), keys.dtype),
+                   jax.ShapeDtypeStruct((B,), vals.dtype)],
+        interpret=interpret,
+    )(keys, vals)

@@ -1,0 +1,48 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode — the kernel body
+executes as plain JAX ops, validating the exact computation the TPU grid
+would run.  On a real TPU backend ``interpret=False`` compiles via Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.pi_search import pi_search
+from repro.kernels.bitonic_sort import bitonic_sort
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("fanout", "tile_q"))
+def pi_search_op(storage: jnp.ndarray, queries: jnp.ndarray,
+                 fanout: int = 8, tile_q: int = 256) -> jnp.ndarray:
+    """Floor positions of `queries` in the sorted padded `storage` array."""
+    return pi_search(storage, queries, fanout=fanout, tile_q=tile_q,
+                     interpret=_interpret())
+
+
+@jax.jit
+def bitonic_sort_op(keys: jnp.ndarray, vals: jnp.ndarray):
+    """Ascending (key, val) lexicographic sort of a power-of-two batch."""
+    return bitonic_sort(keys, vals, interpret=_interpret())
+
+
+def sort_queries_kernel(ops: jnp.ndarray, keys: jnp.ndarray,
+                        vals: jnp.ndarray):
+    """Paper Def. 3: sort a query batch by key, stable on arrival order.
+
+    Packs the arrival index into the tie-break lane so the bitonic network
+    reproduces a stable sort, then unpacks the permutation and applies it
+    to the full (op, key, val) triplet.
+    """
+    B = keys.shape[0]
+    arrival = jnp.arange(B, dtype=jnp.int32)
+    _, perm = bitonic_sort_op(keys, arrival)
+    return perm, ops[perm], keys[perm], vals[perm]

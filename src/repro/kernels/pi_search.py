@@ -1,0 +1,144 @@
+"""Pallas TPU kernel: batched PI index-layer descent (the paper's Alg. 2).
+
+The paper's hot spot is the SIMD entry compare: load M contiguous keys of an
+entry into a SIMD register, compare against the query key, route by the mask
+(Fig. 2).  On TPU the same idea becomes *structural*:
+
+* an "entry" is an aligned group of F keys in a dense per-level array —
+  one VPU vector op compares a whole query tile against a whole entry;
+* the routing table is rank arithmetic: ``child = pos * F + rank`` where
+  ``rank = Σ(key ≤ q) − 1`` (popcount of the paper's comparison mask);
+* the paper's group query processing + software prefetch (§4.3.4) become
+  the grid: each grid step owns a TILE_Q-query block, and BlockSpec streams
+  the level arrays HBM→VMEM once per block, double-buffered by Pallas.
+
+VMEM budget: the index layer holds ~C/(F−1) keys, so with C = 2²⁰ int32
+keys and F = 8 the whole index layer is ~600 KB — it fits VMEM outright,
+which is the TPU analogue of the paper's "pin the high levels in cache"
+future-work optimization (§7).  For larger C the top levels stay VMEM-
+resident and only the bottom level streams.
+
+The kernel is validated in interpret mode on CPU (this container has no
+TPU); the BlockSpec tiling below is the real TPU launch geometry.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _descend_kernel(*refs, num_levels: int, fanout: int, sentinel):
+    """One grid step: full descent for one query tile.
+
+    refs = (top_level, ..., level1, storage, queries_tile, out_tile)
+    Level arrays are pre-padded so every child group of F keys is in
+    bounds (ops.pad_levels) — gathers need no bounds handling.
+    """
+    *level_refs, storage_ref, q_ref, out_ref = refs
+    q = q_ref[...]
+    f32 = jnp.int32
+
+    # top level: ≤ F entries — one broadcast compare ("SIMD" over the tile)
+    top = level_refs[0][...] if num_levels else storage_ref[...]
+    rank = jnp.sum(top[None, :] <= q[:, None], axis=1).astype(f32) - 1
+    underflow = rank < 0
+    pos = jnp.maximum(rank, 0)
+
+    # descend: one compare of the F-key child entry per level (Alg. 2 loop)
+    arrs = [level_refs[i][...] for i in range(1, num_levels)] + [
+        storage_ref[...]]
+    for arr in arrs:
+        child = pos[:, None] * fanout + \
+            jnp.arange(fanout, dtype=f32)[None, :]
+        ck = jnp.take(arr, child.reshape(-1), mode="clip").reshape(child.shape)
+        r = jnp.sum(ck <= q[:, None], axis=1).astype(f32) - 1
+        pos = pos * fanout + jnp.maximum(r, 0)
+
+    out_ref[...] = jnp.where(underflow, jnp.int32(-1), pos)
+
+
+def pad_levels(storage: jnp.ndarray, fanout: int,
+               sentinel) -> Sequence[jnp.ndarray]:
+    """Derive + pad the index-layer levels so child groups are in bounds.
+
+    Level l holds every fanout**l-th storage key.  Each level is padded to
+    ``len(parent_level) * fanout`` so ``pos*F + j`` never leaves the array
+    (padding keys are the sentinel == +max, never ≤ any query).
+    Returns [top, ..., level1] plus the padded storage array.
+    """
+    C = storage.shape[0]
+    sizes = []
+    size = C
+    while size > fanout:
+        size = -(-size // fanout)
+        sizes.append(size)  # level 1..H sizes, bottom→top
+    levels = []
+    for lvl, size in enumerate(sizes, start=1):
+        stride = fanout ** lvl
+        src = np.arange(size) * stride
+        lv = jnp.take(storage, jnp.asarray(src), mode="fill",
+                      fill_value=sentinel)
+        levels.append(lv)
+    # pad: level l to len(level l+1)*F; storage to len(level 1)*F
+    padded = []
+    tops = levels[::-1]  # top ... level1
+    for i, lv in enumerate(tops):
+        parent = tops[i - 1] if i > 0 else None
+        want = lv.shape[0] if parent is None else parent.shape[0] * fanout
+        if want > lv.shape[0]:
+            lv = jnp.concatenate(
+                [lv, jnp.full((want - lv.shape[0],), sentinel, lv.dtype)])
+        padded.append(lv)
+    want = (padded[-1].shape[0] if padded else 1) * fanout
+    if want > C:
+        storage = jnp.concatenate(
+            [storage, jnp.full((want - C,), sentinel, storage.dtype)])
+    return padded, storage
+
+
+def pi_search(storage: jnp.ndarray, queries: jnp.ndarray, *, fanout: int = 8,
+              tile_q: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """Batched floor search over a sorted sentinel-padded key array.
+
+    Args:
+      storage: (C,) sorted keys, padded with the dtype max sentinel.
+      queries: (B,) query keys; B must be a multiple of tile_q (pad with
+               sentinel queries if needed — they return C-1 harmlessly).
+    Returns:
+      (B,) int32 positions (−1 where q < storage[0]).
+    """
+    if np.issubdtype(np.dtype(storage.dtype), np.integer):
+        sentinel = np.dtype(storage.dtype).type(
+            np.iinfo(np.dtype(storage.dtype)).max)
+    else:
+        sentinel = np.dtype(storage.dtype).type(np.inf)
+    levels, storage_p = pad_levels(storage, fanout, sentinel)
+    B = queries.shape[0]
+    assert B % tile_q == 0, (B, tile_q)
+    grid = (B // tile_q,)
+    num_levels = len(levels)
+
+    # levels + storage are broadcast to every grid step (index_map → block 0);
+    # the query tile and output walk the grid.
+    level_specs = [pl.BlockSpec(lv.shape, lambda i: (0,)) for lv in levels]
+    in_specs = level_specs + [
+        pl.BlockSpec(storage_p.shape, lambda i: (0,)),
+        pl.BlockSpec((tile_q,), lambda i: (i,)),
+    ]
+    out_spec = pl.BlockSpec((tile_q,), lambda i: (i,))
+
+    kernel = functools.partial(_descend_kernel, num_levels=num_levels,
+                               fanout=fanout, sentinel=sentinel)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=interpret,
+    )(*levels, storage_p, queries.astype(storage.dtype))

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each kernel in this package has an exact reference here; kernel tests sweep
+shapes/dtypes and assert bit-equality (integer outputs) or allclose.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pi_search_ref(storage: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+    """Floor positions: largest i with storage[i] <= q, else -1.
+
+    ``storage`` is the sorted, sentinel-padded storage-layer key array; the
+    index layer is derived from it (every F**l-th key), so the descent's
+    answer is definitionally ``searchsorted(right) - 1``.
+    """
+    pos = jnp.searchsorted(storage, queries.astype(storage.dtype),
+                           side="right").astype(jnp.int32) - 1
+    return pos
+
+
+def bitonic_sort_ref(keys: jnp.ndarray, vals: jnp.ndarray):
+    """Lexicographic (key, val) sort oracle.
+
+    The bitonic network resolves key ties by value; packing the arrival
+    index into ``vals`` therefore reproduces the paper's stable Def. 3
+    ordering exactly.
+    """
+    order = jnp.lexsort((vals, keys))
+    return keys[order], vals[order]

@@ -1,0 +1,26 @@
+"""Production meshes.  A function (not a module constant) so importing this
+module never touches jax device state — the dry-run must set XLA_FLAGS
+*before* the first jax call.
+
+Single pod : (16, 16)      axes ("data", "model")        — 256 chips (v5e)
+Multi-pod  : (2, 16, 16)   axes ("pod", "data", "model") — 512 chips;
+             the "pod" axis crosses DCI and carries cross-pod data
+             parallelism (gradient all-reduce once per step, optionally
+             int8-compressed — optim.compressed_psum).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Scaled-down mesh for CI on 8 forced host devices."""
+    shape = (2, 2, 2) if multi_pod else (4, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

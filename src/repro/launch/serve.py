@@ -1,0 +1,147 @@
+"""Batched serving driver with a PI-indexed session table.
+
+The paper's index is a first-class serving component here: the session
+table (request id → KV-cache slot) is a ``PIIndex``, and every scheduler
+tick issues ONE sorted batch of index queries — admissions are INSERTs,
+lookups are SEARCHes, completions are DELETEs — exactly the paper's
+batch-processing model (Alg. 1) applied to a continuous-batching server.
+
+The model side runs real prefill/decode steps on CPU for the small
+configs (examples/ycsb_serve.py) and lowers for the pod meshes via the
+same step builders the dry-run uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DELETE, INSERT, SEARCH, PIConfig, build, execute,
+                        maybe_rebuild)
+from repro.models import make_decode_step, make_prefill_step
+from repro.models import decode as dec
+from repro.models.base import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray        # (S,) token ids
+    max_new: int = 8
+    out: Optional[List[int]] = None
+
+
+class Server:
+    """Continuous batching with a fixed pool of cache slots."""
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int = 8,
+                 max_len: int = 64):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        # PI session table: key = request id, value = slot
+        self.table = build(PIConfig(capacity=4 * n_slots,
+                                    pending_capacity=2 * n_slots, fanout=4),
+                           jnp.zeros((0,), jnp.int32),
+                           jnp.zeros((0,), jnp.int32))
+        self.free = list(range(n_slots))
+        self.cache = dec.init_cache(cfg, n_slots, max_len)
+        self.pos = np.zeros(n_slots, np.int32)
+        self.live: Dict[int, Request] = {}
+        self.slot_of: Dict[int, int] = {}
+        self._decode = jax.jit(make_decode_step(cfg))
+        self.queries_processed = 0
+
+    # -- PI session-table tick (one sorted batch per scheduler round) -----
+    def _index_tick(self, admits, lookups, completes):
+        ops, keys, vals = [], [], []
+        for rid, slot in admits:
+            ops.append(INSERT)
+            keys.append(rid)
+            vals.append(slot)
+        for rid in lookups:
+            ops.append(SEARCH)
+            keys.append(rid)
+            vals.append(0)
+        for rid in completes:
+            ops.append(DELETE)
+            keys.append(rid)
+            vals.append(0)
+        if not ops:
+            return {}
+        self.table, (found, val) = execute(
+            self.table, jnp.asarray(np.array(ops, np.int32)),
+            jnp.asarray(np.array(keys, np.int32)),
+            jnp.asarray(np.array(vals, np.int32)))
+        self.table = maybe_rebuild(self.table)
+        self.queries_processed += len(ops)
+        out = {}
+        base = len(admits)
+        for i, rid in enumerate(lookups):
+            out[rid] = int(val[base + i]) if bool(found[base + i]) else None
+        return out
+
+    def admit(self, reqs: List[Request]):
+        admits = []
+        for r in reqs:
+            if not self.free:
+                break
+            slot = self.free.pop()
+            self.live[r.rid] = r
+            self.slot_of[r.rid] = slot
+            r.out = []
+            admits.append((r.rid, slot))
+            # per-slot prefill: run the prompt through decode steps (small
+            # configs; a production server uses the prefill step per batch)
+            for t, tok in enumerate(r.prompt):
+                self._step_slot(slot, int(tok), t)
+            self.pos[slot] = len(r.prompt)
+        self._index_tick(admits, [], [])
+        return len(admits)
+
+    def _step_slot(self, slot, tok, idx):
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        tokens[slot, 0] = tok
+        nxt, logits, self.cache = self._decode(
+            self.params, {"cache": self.cache,
+                          "tokens": jnp.asarray(tokens),
+                          "idx": jnp.int32(idx)})
+        return int(np.asarray(nxt)[slot])
+
+    def tick(self):
+        """One decode round for every live request (batched), then retire
+        finished ones.  Slot resolution goes through the PI table."""
+        if not self.live:
+            return []
+        rids = sorted(self.live)
+        slots = self._index_tick([], rids, [])
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        idx = int(max(self.pos[self.slot_of[r]] for r in rids))
+        for rid in rids:
+            slot = slots[rid]
+            assert slot == self.slot_of[rid], "PI table diverged"
+            last = self.live[rid].out[-1] if self.live[rid].out else \
+                int(self.live[rid].prompt[-1])
+            tokens[slot, 0] = last
+        nxt, logits, self.cache = self._decode(
+            self.params, {"cache": self.cache,
+                          "tokens": jnp.asarray(tokens),
+                          "idx": jnp.int32(idx)})
+        nxt = np.asarray(nxt)
+        finished = []
+        for rid in rids:
+            slot = self.slot_of[rid]
+            r = self.live[rid]
+            r.out.append(int(nxt[slot]))
+            self.pos[slot] += 1
+            if len(r.out) >= r.max_new or self.pos[slot] >= self.max_len - 1:
+                finished.append(rid)
+        self._index_tick([], [], finished)
+        for rid in finished:
+            self.free.append(self.slot_of.pop(rid))
+            del self.live[rid]
+        return finished

@@ -1,0 +1,17 @@
+"""Model zoo: the assigned architectures as composable JAX modules."""
+from repro.models.base import (ModelConfig, abstract_params, init_params,
+                               spec_tree, tree_bytes)
+from repro.models.transformer import model_layout
+from repro.models.steps import (SHAPES, ShapeSpec, abstract_train_state,
+                                init_train_state, input_specs,
+                                make_decode_step, make_prefill_step,
+                                make_train_step, shape_applicable)
+from repro.models.transformer import flash_attention, forward, loss_fn
+
+__all__ = [
+    "ModelConfig", "abstract_params", "init_params", "model_layout",
+    "spec_tree", "tree_bytes", "SHAPES", "ShapeSpec", "abstract_train_state",
+    "init_train_state", "input_specs", "make_decode_step",
+    "make_prefill_step", "make_train_step", "shape_applicable",
+    "flash_attention", "forward", "loss_fn",
+]

@@ -1,0 +1,224 @@
+"""Model config + declarative parameter layout shared by every architecture.
+
+A model declares its parameters once as ``ParamDef`` entries (shape +
+logical sharding axes + init scale).  From that single declaration we derive
+  * abstract params (ShapeDtypeStruct tree)   — for the dry-run lower()
+  * logical spec tree                          — for in_shardings
+  * concrete init                              — for smoke tests / training
+so shapes, shardings and init can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    family: str = "dense"       # dense | moe | mla_moe | ssm | griffin
+    n_layers: int = 2
+    d_model: int = 64
+    n_heads: int = 4
+    n_kv: int = 4
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    d_ff: int = 256
+    vocab: int = 256
+    act: str = "swiglu"         # swiglu | geglu | gelu
+    norm: str = "rmsnorm"       # rmsnorm | layernorm
+    rope_theta: float = 10_000.0
+    use_rope: bool = True
+    qk_norm: bool = False       # chameleon
+    tie_embeddings: bool = False
+    logit_softcap: Optional[float] = None
+    sliding_window: Optional[int] = None  # local attention window
+    input_mode: str = "tokens"  # tokens | embeddings (stub modality frontend)
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    moe_capacity: float = 1.25   # per-expert capacity factor (tokens drop)
+    moe_impl: str = "auto"       # auto (shard_map on a mesh) | gspmd
+    first_k_dense: int = 0      # deepseek: leading dense layers
+    d_ff_dense: int = 0         # their ff width
+    # --- MLA (deepseek) ---
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    mtp_depth: int = 0          # multi-token-prediction extra blocks
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 64
+    # --- griffin (recurrentgemma) ---
+    lru_width: int = 0
+    attn_every: int = 0         # 3 => pattern (rec, rec, attn)
+    # --- numerics / parallel policy ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    seq_shard: bool = False     # SP: shard sequence dim over "model"
+    embed_scale: bool = False   # gemma: scale embeddings by sqrt(d)
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to a multiple of 256 so the table TP-shards on any
+        mesh (padding logits are masked to −∞ in unembed)."""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def experts_padded(self) -> int:
+        """Experts padded to a multiple of 16 (the production model axis)
+        so expert weights/compute EP-shard; dummy experts receive no
+        tokens (router logits cover only the real experts)."""
+        return -(-self.n_experts // 16) * 16 if self.n_experts else 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6·N·D roofline bookkeeping)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab
+        hd = self.hd
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            din = self.ssm_expand * d
+            nh = din // self.ssm_headdim
+            per = (d * (2 * din + 2 * self.ssm_state * 1 + nh)  # in_proj(z,x)+B,C+dt
+                   + din * self.ssm_conv + din * d + 2 * d)
+            # in_proj: d→(2*din + 2*state + nh); approximate faithful SSD sizes
+            per = d * (2 * din + 2 * self.ssm_state + nh) + \
+                (din + 2 * self.ssm_state) * self.ssm_conv + nh * 2 + din + din * d + d
+            return emb + L * per + d
+        att = d * self.n_heads * hd + d * self.n_kv * hd * 2 + \
+            self.n_heads * hd * d
+        if self.use_mla:
+            att = (d * self.q_lora_rank +
+                   self.q_lora_rank * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim) +
+                   d * (self.kv_lora_rank + self.qk_rope_dim) +
+                   self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim) +
+                   self.n_heads * self.v_head_dim * d)
+        glu = self.act in ("swiglu", "geglu")
+        def ff_params(width):
+            return d * width * (3 if glu else 2)
+        if self.family in ("moe", "mla_moe"):
+            moe_layers = L - self.first_k_dense
+            per_moe = self.n_experts * ff_params(self.d_ff_expert) + \
+                self.n_shared_experts * ff_params(self.d_ff_expert) + \
+                d * self.n_experts
+            dense_part = self.first_k_dense * ff_params(self.d_ff_dense or self.d_ff)
+            ff = moe_layers * per_moe + dense_part
+        elif self.family == "griffin":
+            # 2/3 recurrent (lru) + 1/3 attention
+            n_att = L // (self.attn_every or 3)
+            n_rec = L - n_att
+            rec = d * self.lru_width * 2 + self.lru_width * d + \
+                self.lru_width * (self.ssm_conv or 4) + 3 * self.lru_width
+            ff = L * ff_params(self.d_ff)
+            return emb + n_att * att + n_rec * rec + ff + 2 * d * L + d
+        else:
+            ff = L * ff_params(self.d_ff)
+        norms = L * 2 * d + d
+        return emb + L * att + ff + norms if self.family not in ("moe", "mla_moe") \
+            else emb + L * att + ff + norms
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: routed top-k + shared only)."""
+        if self.family not in ("moe", "mla_moe"):
+            return self.param_count()
+        full = self.param_count()
+        glu = self.act in ("swiglu", "geglu")
+        per_expert = self.d_model * self.d_ff_expert * (3 if glu else 2)
+        moe_layers = self.n_layers - self.first_k_dense
+        inactive = moe_layers * (self.n_experts - self.top_k) * per_expert
+        return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# declarative parameter layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"     # normal | zeros | ones | small
+    scale: Optional[float] = None   # default: 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+Layout = Dict[str, ParamDef]
+
+
+def abstract_params(layout: Layout, dtype) -> Dict:
+    return _unflatten({k: jax.ShapeDtypeStruct(v.shape, jnp.dtype(dtype))
+                       for k, v in layout.items()})
+
+
+def spec_tree(layout: Layout) -> Dict:
+    return _unflatten({k: v.logical for k, v in layout.items()})
+
+
+def init_params(layout: Layout, key, dtype) -> Dict:
+    flat = {}
+    names = sorted(layout)
+    keys = jax.random.split(key, len(names))
+    for k, sub in zip(names, keys):
+        d = layout[k]
+        if d.init == "zeros":
+            arr = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            arr = jnp.ones(d.shape, dtype)
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = d.scale if d.scale is not None else 1.0 / math.sqrt(fan_in)
+            if d.init == "small":
+                scale = 0.02
+            arr = (jax.random.normal(sub, d.shape, jnp.float32) * scale) \
+                .astype(dtype)
+        flat[k] = arr
+    return _unflatten(flat)
+
+
+def _unflatten(flat: Dict[str, object]) -> Dict:
+    out: Dict = {}
+    for k, v in flat.items():
+        parts = k.split("/")
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return out
+
+
+def cast_floats(tree, dtype):
+    """Cast floating leaves to the compute dtype (mixed-precision entry)."""
+    dt = jnp.dtype(dtype)
+
+    def c(a):
+        if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating):
+            return a.astype(dt)
+        return a
+    return jax.tree.map(c, tree)
+
+
+def tree_bytes(tree) -> int:
+    return sum(np.prod(l.shape) * np.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))

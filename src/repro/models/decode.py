@@ -1,0 +1,310 @@
+"""Serving paths: KV/state cache construction, prefill, and single-token
+decode for every architecture family.
+
+Cache layouts (leaves stacked over layers so decode scans over
+(params, cache) with one traced layer):
+
+  dense    : k/v (L,B,T,KV,hd), pos (L,T)         — T = window for
+             sliding-window archs (ring buffer), else cache_len
+  moe      : same as dense (+ separate stack for the leading dense layers)
+  mla_moe  : c_kv (L,B,T,kv_lora), k_rope (L,B,T,1,dr)   — compressed MLA
+  ssm      : ssm (L,B,H,P,N) fp32, conv (L,B,K−1,conv_dim)
+  griffin  : per group: rec h (G,B,w) + conv, attn ring k/v (G,B,W,KV,hd)
+
+``long_500k`` is only lowered for ssm/griffin — their cache is O(1)/O(W),
+which is the point of including them in the pool (DESIGN.md shape notes).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import griffin as gr
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.base import ModelConfig
+from repro.models.transformer import (add_positions, dense_block_apply,
+                                      embed_tokens, norm, unembed)
+from repro.sharding import constrain
+
+
+def _attn_cache(cfg: ModelConfig, layers: int, B: int, T: int, dtype):
+    KV, hd = cfg.n_kv, cfg.hd
+    return {
+        "k": jnp.zeros((layers, B, T, KV, hd), dtype),
+        "v": jnp.zeros((layers, B, T, KV, hd), dtype),
+        "pos": jnp.full((layers, T), -1, jnp.int32),
+    }
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, B: int, seq_len: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    T = cache_len(cfg, seq_len)
+    if cfg.family == "dense":
+        return _attn_cache(cfg, cfg.n_layers, B, T, dt)
+    if cfg.family in ("moe", "mla_moe"):
+        n_moe = cfg.n_layers - cfg.first_k_dense
+        if cfg.use_mla:
+            def mla(layers):
+                return {
+                    "c_kv": jnp.zeros((layers, B, T, cfg.kv_lora_rank), dt),
+                    "k_rope": jnp.zeros((layers, B, T, 1, cfg.qk_rope_dim),
+                                        dt),
+                }
+            out = {"moe": mla(n_moe)}
+            if cfg.first_k_dense:
+                out["dense"] = mla(cfg.first_k_dense)
+            return out
+        out = {"moe": _attn_cache(cfg, n_moe, B, T, dt)}
+        if cfg.first_k_dense:
+            out["dense"] = _attn_cache(cfg, cfg.first_k_dense, B, T, dt)
+        return out
+    if cfg.family == "ssm":
+        din, nh, conv_dim = ssm_mod._dims(cfg)
+        L = cfg.n_layers
+        return {
+            "ssm": jnp.zeros((L, B, nh, cfg.ssm_headdim, cfg.ssm_state),
+                             jnp.float32),
+            "conv": jnp.zeros((L, B, cfg.ssm_conv - 1, conv_dim), dt),
+        }
+    if cfg.family == "griffin":
+        G = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers % cfg.attn_every
+        K = cfg.ssm_conv or 4
+        W = min(seq_len, cfg.sliding_window or seq_len)
+
+        def rec(layers):
+            return {"h": jnp.zeros((layers, B, cfg.lru_width), jnp.float32),
+                    "conv": jnp.zeros((layers, B, K - 1, cfg.lru_width), dt)}
+        out = {"g_rec0": rec(G), "g_rec1": rec(G),
+               "g_attn": _attn_cache(cfg, G, B, W, dt)}
+        for t in range(tail):
+            out[f"tail{t}"] = rec(1)
+        return out
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, idx):
+    """One token for the whole batch.  tokens: (B,1) (or embeds (B,1,d));
+    idx: scalar int32 absolute position.  Returns (logits (B,1,V), cache)."""
+    from repro.models.base import cast_floats
+    params = cast_floats(params, cfg.compute_dtype)
+    if cfg.input_mode == "embeddings":
+        x = tokens.astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        x = embed_tokens(cfg, params, tokens)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(idx, (B, 1)).astype(jnp.int32)
+    x = add_positions(cfg, x, positions)
+    x = constrain(x, "batch", None, "embed")
+
+    if cfg.family == "dense":
+        T = cache["k"].shape[2]
+        slot = (idx % T).astype(jnp.int32)
+
+        def body(h, xs):
+            p_l, c_l = xs
+            cd = dict(c_l, slot=slot)
+            h, (ck, cv, cpos) = dense_block_apply(cfg, p_l, h, positions,
+                                                  cache=cd)
+            return h, {"k": ck, "v": cv, "pos": cpos}
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+
+    elif cfg.family in ("moe", "mla_moe"):
+        new_cache = {}
+
+        def cache_in(c_l):
+            if cfg.use_mla:
+                return dict(c_l, idx=idx)
+            T = c_l["k"].shape[1]
+            return dict(c_l, slot=(idx % T).astype(jnp.int32))
+
+        def cache_out(kv):
+            if cfg.use_mla:
+                return {"c_kv": kv[0], "k_rope": kv[1]}
+            return {"k": kv[0], "v": kv[1], "pos": kv[2]}
+
+        if cfg.first_k_dense:
+            def dense_body(h, xs):
+                p_l, c_l = xs
+                h, kv = moe_mod.dense_layer(cfg, p_l, h, positions,
+                                            cache=cache_in(c_l))
+                return h, cache_out(kv)
+            x, nc = jax.lax.scan(dense_body, x,
+                                 (params["blocks"]["dense"], cache["dense"]))
+            new_cache["dense"] = nc
+
+        def moe_body(h, xs):
+            p_l, c_l = xs
+            h, (kv, _) = moe_mod.moe_layer(cfg, p_l, h, positions,
+                                           cache=cache_in(c_l))
+            return h, cache_out(kv)
+        x, nc = jax.lax.scan(moe_body, x,
+                             (params["blocks"]["moe"], cache["moe"]))
+        new_cache["moe"] = nc
+
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            p_l, c_l = xs
+            cd = dict(c_l, idx=idx)
+            h, (st, conv) = ssm_mod.block_apply(cfg, p_l, h, cache=cd)
+            return h, {"ssm": st, "conv": conv}
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+
+    elif cfg.family == "griffin":
+        W = cache["g_attn"]["k"].shape[2]
+        slot = (idx % W).astype(jnp.int32)
+
+        def body(h, xs):
+            p_g, c_g = xs
+            h, (h0, cv0) = gr.rec_layer(cfg, p_g["g_rec0"], h,
+                                        cache=c_g["g_rec0"])
+            h, (h1, cv1) = gr.rec_layer(cfg, p_g["g_rec1"], h,
+                                        cache=c_g["g_rec1"])
+            cd = dict(c_g["g_attn"], slot=slot)
+            h, (ck, cv, cpos) = gr.attn_layer(cfg, p_g["g_attn"], h,
+                                              positions, cache=cd)
+            return h, {"g_rec0": {"h": h0, "conv": cv0},
+                       "g_rec1": {"h": h1, "conv": cv1},
+                       "g_attn": {"k": ck, "v": cv, "pos": cpos}}
+        groups_p = {k: params["blocks"][k]
+                    for k in ("g_rec0", "g_rec1", "g_attn")}
+        groups_c = {k: cache[k] for k in ("g_rec0", "g_rec1", "g_attn")}
+        x, new_cache = jax.lax.scan(body, x, (groups_p, groups_c))
+        tail = cfg.n_layers % cfg.attn_every
+        for t in range(tail):
+            p_l = jax.tree.map(lambda a: a[0], params["blocks"][f"tail{t}"])
+            c_l = jax.tree.map(lambda a: a[0], cache[f"tail{t}"])
+            x, (ht, cvt) = gr.rec_layer(cfg, p_l, x, cache=c_l)
+            new_cache[f"tail{t}"] = {"h": ht[None], "conv": cvt[None]}
+    else:
+        raise ValueError(cfg.family)
+
+    x = norm(cfg, x, params["final_norm"])
+    logits = unembed(cfg, params, x)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _fill_ring(ks, T):
+    """Place captured (L,B,S,...) keys into a (L,B,T,...) ring cache.
+    Returns (cache_array, pos (L,T))."""
+    L, B, S = ks.shape[:3]
+    if S <= T:
+        pad = [(0, 0), (0, 0), (0, T - S)] + [(0, 0)] * (ks.ndim - 3)
+        cache = jnp.pad(ks, pad)
+        pos = jnp.concatenate([jnp.arange(S, dtype=jnp.int32),
+                               jnp.full((T - S,), -1, jnp.int32)])
+    else:
+        tailpos = jnp.arange(S - T, S, dtype=jnp.int32)
+        slots = tailpos % T
+        cache = jnp.zeros((L, B, T) + ks.shape[3:], ks.dtype)
+        cache = cache.at[:, :, slots].set(ks[:, :, S - T:])
+        pos = jnp.zeros((T,), jnp.int32).at[slots].set(tailpos)
+    return cache, jnp.broadcast_to(pos, (L, T))
+
+
+def prefill(cfg: ModelConfig, params, tokens=None, embeds=None,
+            total_len: int | None = None):
+    """Full-prompt forward that also builds the decode cache.
+    Returns (last-token logits (B,1,V), cache)."""
+    from repro.models.base import cast_floats
+    params = cast_floats(params, cfg.compute_dtype)
+    if cfg.input_mode == "embeddings":
+        x = embeds.astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        x = embed_tokens(cfg, params, tokens)
+    x = constrain(x, "batch", "seq", "embed")
+    B, S = x.shape[:2]
+    total_len = total_len or S
+    T = cache_len(cfg, total_len)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = add_positions(cfg, x, positions)
+
+    if cfg.family == "dense":
+        def body(h, p_l):
+            h, (k, v) = dense_block_apply(cfg, p_l, h, positions)
+            return h, (k, v)
+        x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+        ck, pos = _fill_ring(ks, T)
+        cv, _ = _fill_ring(vs, T)
+        new_cache = {"k": ck, "v": cv, "pos": pos}
+
+    elif cfg.family in ("moe", "mla_moe"):
+        new_cache = {}
+
+        def pack(kv_stack):
+            if cfg.use_mla:
+                c_kv, k_rope = kv_stack
+                ckv, _ = _fill_ring(c_kv, T)
+                kr, _ = _fill_ring(k_rope, T)
+                return {"c_kv": ckv, "k_rope": kr}
+            k, v = kv_stack
+            ck, pos = _fill_ring(k, T)
+            cv, _ = _fill_ring(v, T)
+            return {"k": ck, "v": cv, "pos": pos}
+
+        if cfg.first_k_dense:
+            def dbody(h, p_l):
+                h, kv = moe_mod.dense_layer(cfg, p_l, h, positions)
+                return h, kv
+            x, kvs = jax.lax.scan(dbody, x, params["blocks"]["dense"])
+            new_cache["dense"] = pack(kvs)
+
+        def mbody(h, p_l):
+            h, (kv, _) = moe_mod.moe_layer(cfg, p_l, h, positions)
+            return h, kv
+        x, kvs = jax.lax.scan(mbody, x, params["blocks"]["moe"])
+        new_cache["moe"] = pack(kvs)
+
+    elif cfg.family == "ssm":
+        def body(h, p_l):
+            h, (st, conv) = ssm_mod.block_apply(cfg, p_l, h)
+            return h, (st, conv)
+        x, (sts, convs) = jax.lax.scan(body, x, params["blocks"])
+        new_cache = {"ssm": sts, "conv": convs}
+
+    elif cfg.family == "griffin":
+        W = cache_len(cfg, total_len) if cfg.sliding_window else total_len
+
+        def body(h, p_g):
+            h, (h0, c0) = gr.rec_layer(cfg, p_g["g_rec0"], h)
+            h, (h1, c1) = gr.rec_layer(cfg, p_g["g_rec1"], h)
+            h, (k, v) = gr.attn_layer(cfg, p_g["g_attn"], h, positions)
+            return h, ((h0, c0), (h1, c1), (k, v))
+        groups_p = {k: params["blocks"][k]
+                    for k in ("g_rec0", "g_rec1", "g_attn")}
+        x, ((h0s, c0s), (h1s, c1s), (ks, vs)) = jax.lax.scan(
+            body, x, groups_p)
+        ck, pos = _fill_ring(ks, W)
+        cv, _ = _fill_ring(vs, W)
+        new_cache = {"g_rec0": {"h": h0s, "conv": c0s},
+                     "g_rec1": {"h": h1s, "conv": c1s},
+                     "g_attn": {"k": ck, "v": cv, "pos": pos}}
+        tail = cfg.n_layers % cfg.attn_every
+        for t in range(tail):
+            p_l = jax.tree.map(lambda a: a[0], params["blocks"][f"tail{t}"])
+            x, (ht, cvt) = gr.rec_layer(cfg, p_l, x)
+            new_cache[f"tail{t}"] = {"h": ht[None], "conv": cvt[None]}
+    else:
+        raise ValueError(cfg.family)
+
+    x = norm(cfg, x, params["final_norm"])
+    logits = unembed(cfg, params, x[:, -1:])
+    return logits, new_cache

@@ -1,0 +1,171 @@
+"""Griffin / RecurrentGemma blocks: RG-LRU recurrence + local (MQA) attention.
+
+Layer pattern is (recurrent, recurrent, attention) repeated (attn_every=3);
+training runs the RG-LRU as an associative scan over the sequence (O(log S)
+depth), decode is the O(1) recurrent update + a ring-buffer window cache
+for the local-attention layers — together these make recurrentgemma the
+second arch that runs the 500k decode shape.
+
+Gate linears are per-dimension (diagonal), a documented simplification of
+RecurrentGemma's block-diagonal gates (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import Layout, ModelConfig, ParamDef
+from repro.models.transformer import (attn_apply, attn_layout, mlp_apply,
+                                      mlp_layout, norm)
+from repro.sharding import constrain
+
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin paper)
+
+
+def _rec_layout(cfg: ModelConfig, prefix: str, layers: int) -> Layout:
+    d, w = cfg.d_model, cfg.lru_width
+    K = cfg.ssm_conv or 4
+    L, ll = (layers,), ("layers",)
+    # NOTE (EXPERIMENTS §Perf it.7, refuted): running the LRU branch
+    # data-parallel-only (lru_width replicated) cuts the collective term
+    # 33% but triples memory/compute — the scan's elementwise state
+    # traffic is what TP actually shards here.  Keep lru_width on "mlp".
+    return {
+        f"{prefix}/w_x": ParamDef(L + (d, w), ll + ("fsdp", "mlp")),
+        f"{prefix}/w_gate": ParamDef(L + (d, w), ll + ("fsdp", "mlp")),
+        f"{prefix}/conv_w": ParamDef(L + (K, w), ll + (None, "mlp")),
+        f"{prefix}/conv_b": ParamDef(L + (w,), ll + ("mlp",), "zeros"),
+        f"{prefix}/gate_r": ParamDef(L + (w,), ll + ("mlp",), "zeros"),
+        f"{prefix}/bias_r": ParamDef(L + (w,), ll + ("mlp",), "zeros"),
+        f"{prefix}/gate_i": ParamDef(L + (w,), ll + ("mlp",), "zeros"),
+        f"{prefix}/bias_i": ParamDef(L + (w,), ll + ("mlp",), "zeros"),
+        f"{prefix}/lam": ParamDef(L + (w,), ll + ("mlp",), "ones"),
+        f"{prefix}/w_out": ParamDef(L + (w, d), ll + ("mlp", "fsdp")),
+    }
+
+
+def _layer_unit_layout(cfg: ModelConfig, kind: str, prefix: str,
+                       layers: int) -> Layout:
+    """One full layer = temporal block (rec|attn) + MLP + 2 norms."""
+    out: Layout = {}
+    if kind == "rec":
+        out.update(_rec_layout(cfg, f"{prefix}/rec", layers))
+    else:
+        out.update(attn_layout(cfg, f"{prefix}/attn", layers))
+    out.update(mlp_layout(cfg, f"{prefix}/mlp", layers))
+    out[f"{prefix}/ln1"] = ParamDef((layers, cfg.d_model), ("layers", None),
+                                    "zeros")
+    out[f"{prefix}/ln2"] = ParamDef((layers, cfg.d_model), ("layers", None),
+                                    "zeros")
+    return out
+
+
+def block_layout(cfg: ModelConfig) -> Layout:
+    """Scan groups of (rec, rec, attn) + a tail of leftover rec layers."""
+    G = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers % cfg.attn_every
+    out: Layout = {}
+    out.update(_layer_unit_layout(cfg, "rec", "g_rec0", G))
+    out.update(_layer_unit_layout(cfg, "rec", "g_rec1", G))
+    out.update(_layer_unit_layout(cfg, "attn", "g_attn", G))
+    for t in range(tail):
+        out.update(_layer_unit_layout(cfg, "rec", f"tail{t}", 1))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _rg_lru_scan(a, b):
+    """h_t = a_t · h_{t−1} + b_t over the time axis (associative)."""
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+    return jax.lax.associative_scan(combine, (a, b), axis=1)
+
+
+def rec_apply(cfg: ModelConfig, p: Dict, x, cache=None):
+    """Recurrent temporal block.  x: (B,S,d).
+    cache: None | dict(h=(B,w) f32, conv=(B,K−1,w), idx) for decode."""
+    B, S, d = x.shape
+    K = cfg.ssm_conv or 4
+    u = x @ p["w_x"]                                   # (B,S,w)
+    g = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+
+    if cache is None:
+        new_conv = u[:, S - (K - 1):, :]                   # prefill carry
+        up = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+        u = sum(up[:, i:i + S, :] * p["conv_w"][i] for i in range(K)) \
+            + p["conv_b"]
+    else:
+        window = jnp.concatenate([cache["conv"], u], axis=1)
+        u = (jnp.einsum("bkc,kc->bc", window, p["conv_w"]) +
+             p["conv_b"])[:, None]
+        new_conv = window[:, 1:, :]
+
+    r = jax.nn.sigmoid(u * p["gate_r"] + p["bias_r"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(u * p["gate_i"] + p["bias_i"]).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * \
+        (i * u.astype(jnp.float32))
+
+    if cache is None:
+        _, h = _rg_lru_scan(a, gated_in)
+        new_h = h[:, -1]                                   # prefill carry
+    else:
+        h = a[:, 0] * cache["h"] + gated_in[:, 0]
+        new_h = h
+        h = h[:, None]
+    y = (h.astype(x.dtype) * g) @ p["w_out"]
+    return y, (new_h, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# layer units + assembly
+# ---------------------------------------------------------------------------
+
+def rec_layer(cfg, p, x, cache=None):
+    h, st = rec_apply(cfg, p["rec"], norm(cfg, x, p["ln1"]), cache)
+    x = x + h
+    x = x + mlp_apply(cfg, p["mlp"], norm(cfg, x, p["ln2"]))
+    return constrain(x, "batch", "seq", "embed"), st
+
+
+def attn_layer(cfg, p, x, positions, cache=None):
+    h, kv = attn_apply(cfg, p["attn"], norm(cfg, x, p["ln1"]), positions,
+                       cache=cache, window=cfg.sliding_window)
+    x = x + h
+    x = x + mlp_apply(cfg, p["mlp"], norm(cfg, x, p["ln2"]))
+    return constrain(x, "batch", "seq", "embed"), kv
+
+
+def forward_blocks(cfg: ModelConfig, params, x, positions):
+    G = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers % cfg.attn_every
+
+    def group(h, p_g):
+        h, _ = rec_layer(cfg, p_g["g_rec0"], h)
+        h, _ = rec_layer(cfg, p_g["g_rec1"], h)
+        h, _ = attn_layer(cfg, p_g["g_attn"], h, positions)
+        return h
+
+    fn = group
+    if cfg.remat:
+        fn = jax.checkpoint(group,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(h, p_g):
+        return fn(h, p_g), None
+
+    groups = {k: params[k] for k in ("g_rec0", "g_rec1", "g_attn")}
+    x, _ = jax.lax.scan(body, x, groups)
+    for t in range(tail):
+        p_l = jax.tree.map(lambda a: a[0], params[f"tail{t}"])
+        x, _ = rec_layer(cfg, p_l, x)
+    return x

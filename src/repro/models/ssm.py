@@ -1,0 +1,178 @@
+"""Mamba-2 (SSD — state-space duality) blocks, chunked-parallel form.
+
+Train/prefill uses the SSD block decomposition: intra-chunk attention-like
+dual form (dense matmuls → MXU-friendly) + inter-chunk linear recurrence
+(lax.scan over chunks).  Decode is the O(1) recurrent update — which is
+why mamba2 is one of the two archs that runs the 500k-token decode shape.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import Layout, ModelConfig, ParamDef
+from repro.models.transformer import norm, rmsnorm
+from repro.sharding import constrain
+
+
+def _dims(cfg: ModelConfig):
+    din = cfg.ssm_expand * cfg.d_model
+    nh = din // cfg.ssm_headdim
+    conv_dim = din + 2 * cfg.ssm_state
+    return din, nh, conv_dim
+
+
+def block_layout(cfg: ModelConfig, layers: int) -> Layout:
+    d, n = cfg.d_model, cfg.ssm_state
+    din, nh, conv_dim = _dims(cfg)
+    L, ll = (layers,), ("layers",)
+    return {
+        "in_proj": ParamDef(L + (d, 2 * din + 2 * n + nh),
+                            ll + ("fsdp", "mlp")),
+        "conv_w": ParamDef(L + (cfg.ssm_conv, conv_dim),
+                           ll + (None, "mlp")),
+        "conv_b": ParamDef(L + (conv_dim,), ll + ("mlp",), "zeros"),
+        "A_log": ParamDef(L + (nh,), ll + (None,), "zeros"),
+        "D": ParamDef(L + (nh,), ll + (None,), "ones"),
+        "dt_bias": ParamDef(L + (nh,), ll + (None,), "zeros"),
+        "gate_norm": ParamDef(L + (din,), ll + ("mlp",), "zeros"),
+        "out_proj": ParamDef(L + (din, d), ll + ("mlp", "fsdp")),
+        "ln": ParamDef(L + (d,), ll + (None,), "zeros"),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d.  x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """SSD over chunks.  xh: (B,S,H,P), dt: (B,S,H), A: (H,),
+    Bm/Cm: (B,S,N) (ngroups=1, shared across heads).  Returns (B,S,H,P)."""
+    b, s, h, p_ = xh.shape
+    n = Bm.shape[-1]
+    nc = s // chunk
+    x = xh.reshape(b, nc, chunk, h, p_)
+    dt = dt.reshape(b, nc, chunk, h)
+    B_ = Bm.reshape(b, nc, chunk, n)
+    C_ = Cm.reshape(b, nc, chunk, n)
+
+    dA = dt * A  # (b,nc,cl,h) negative decays
+    cs = jnp.cumsum(dA, axis=2)
+
+    # --- intra-chunk (dual / attention-like quadratic within chunk) ------
+    #   Y_diag[i] = Σ_{j<=i} (C_i·B_j) dt_j exp(cs_i − cs_j) x_j
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]       # (b,nc,i,j,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", C_, B_)          # (b,nc,i,j)
+    M = scores[..., None] * L                               # (b,nc,i,j,h)
+    Y_diag = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", M, dt, x)
+
+    # --- chunk summary states -------------------------------------------
+    decay_states = jnp.exp(cs[:, :, -1:, :] - cs)           # (b,nc,cl,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", B_, dt * decay_states, x)
+
+    # --- inter-chunk recurrence (scan over chunk axis) --------------------
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                  # (b,nc,h)
+
+    def step(S_prev, inp):
+        dec, st = inp
+        S_new = S_prev * dec[:, :, None, None] + st
+        return S_new, S_prev
+
+    S0 = jnp.zeros((b, h, p_, n), jnp.float32)
+    final_state, S_prevs = jax.lax.scan(
+        step, S0, (jnp.moveaxis(chunk_decay, 1, 0),
+                   jnp.moveaxis(states.astype(jnp.float32), 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)                   # (b,nc,h,p,n)
+
+    # --- off-diagonal (cross-chunk) contribution --------------------------
+    state_decay = jnp.exp(cs)                               # (b,nc,cl,h)
+    Y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", C_,
+                       S_prevs.astype(xh.dtype), state_decay)
+    return (Y_diag + Y_off).reshape(b, s, h, p_), final_state
+
+
+def block_apply(cfg: ModelConfig, p: Dict, x, cache=None):
+    """One mamba2 block.  cache=None → chunked train/prefill;
+    cache=(ssm_state (B,H,P,N), conv_state (B,K-1,conv_dim), idx) → decode."""
+    B_, S, d = x.shape
+    din, nh, conv_dim = _dims(cfg)
+    n = cfg.ssm_state
+    hp = cfg.ssm_headdim
+
+    res = x
+    x = norm(cfg, x, p["ln"])
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din:din + conv_dim]
+    dt_raw = zxbcdt[..., din + conv_dim:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    if cache is None:
+        conv_tail = xBC[:, S - (cfg.ssm_conv - 1):, :]     # prefill carry
+        xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+        xs = xBC[..., :din].reshape(B_, S, nh, hp)
+        Bm = xBC[..., din:din + n]
+        Cm = xBC[..., din + n:]
+        # pad to a chunk multiple with dt=0 (decay 1, zero contribution)
+        # so the carried state is exact for any S
+        Sp = -(-S // cfg.ssm_chunk) * cfg.ssm_chunk
+        if Sp != S:
+            pad = Sp - S
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        else:
+            dt_p = dt
+        y, final_state = ssd_chunked(xs, dt_p, A, Bm, Cm, cfg.ssm_chunk)
+        y = y[:, :S] + p["D"][None, None, :, None] * xs[:, :S]
+        new_cache = (final_state, conv_tail)
+    else:
+        ssm_state, conv_state, _ = cache["ssm"], cache["conv"], cache["idx"]
+        # conv: append current input, take window of K
+        K = cfg.ssm_conv
+        window = jnp.concatenate([conv_state, xBC], axis=1)  # (B,K,conv)
+        xBC = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+        )[:, None, :]
+        new_conv = window[:, 1:, :]
+        xs = xBC[..., :din].reshape(B_, 1, nh, hp)
+        Bm = xBC[..., din:din + n]                          # (B,1,n)
+        Cm = xBC[..., din + n:]
+        dAe = jnp.exp(dt[:, 0] * A)                          # (B,nh)
+        upd = jnp.einsum("bn,bhp,bh->bhpn", Bm[:, 0].astype(jnp.float32),
+                         xs[:, 0].astype(jnp.float32), dt[:, 0])
+        new_state = ssm_state * dAe[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32),
+                       new_state)[:, None]
+        y = y.astype(x.dtype) + p["D"][None, None, :, None] * xs
+        new_cache = (new_state, new_conv)
+
+    y = y.reshape(B_, S, din).astype(res.dtype)   # SSD runs f32; back to bf16
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"])
+    out = y @ p["out_proj"]
+    return res + constrain(out, "batch", "seq", "embed"), new_cache
+
+
+def forward_blocks(cfg: ModelConfig, params, x):
+    fn = partial(block_apply, cfg)
+    if cfg.remat:
+        fn = jax.checkpoint(fn,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(h, p_l):
+        h, _ = fn(p_l, h)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params)
+    return x

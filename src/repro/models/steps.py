@@ -1,0 +1,203 @@
+"""Step builders: train_step / prefill_step / decode_step + input specs.
+
+These are the functions the launcher lowers: the dry-run calls
+``jax.jit(step).lower(**input_specs(...))`` for every (arch × shape × mesh)
+cell; training/serving drivers execute the same functions on real data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.models import decode as dec
+from repro.models.base import (ModelConfig, abstract_params, init_params,
+                               spec_tree)
+from repro.models.transformer import loss_fn, model_layout
+from repro.sharding import logical_to_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# full-attention archs skip long_500k (quadratic KV; see DESIGN.md);
+# ssm/griffin run it — their decode state is O(1)/O(window).
+SUBQUADRATIC_FAMILIES = ("ssm", "griffin")
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return cfg.family in SUBQUADRATIC_FAMILIES
+    return True
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: str):
+    """Abstract inputs + their logical sharding axes for one shape cell."""
+    s = SHAPES[shape]
+    B, S = s.global_batch, s.seq_len
+    i32 = jnp.int32
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if s.kind == "train":
+        if cfg.input_mode == "embeddings":
+            batch = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt),
+                     "labels": jax.ShapeDtypeStruct((B, S), i32)}
+            logical = {"embeds": ("batch", "seq", "embed"),
+                       "labels": ("batch", "seq")}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                     "labels": jax.ShapeDtypeStruct((B, S), i32)}
+            logical = {"tokens": ("batch", "seq"),
+                       "labels": ("batch", "seq")}
+        return batch, logical
+    if s.kind == "prefill":
+        if cfg.input_mode == "embeddings":
+            batch = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt)}
+            logical = {"embeds": ("batch", "seq", "embed")}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            logical = {"tokens": ("batch", "seq")}
+        return batch, logical
+    # decode: one new token + a cache of seq_len
+    if cfg.input_mode == "embeddings":
+        tok = jax.ShapeDtypeStruct((B, 1, cfg.d_model), cdt)
+        tok_logical = ("batch", None, "embed")
+    else:
+        tok = jax.ShapeDtypeStruct((B, 1), i32)
+        tok_logical = ("batch", None)
+    cache = jax.eval_shape(lambda: dec.init_cache(cfg, B, S))
+    cache_logical = cache_logical_axes(cfg, cache)
+    batch = {"tokens": tok, "idx": jax.ShapeDtypeStruct((), i32),
+             "cache": cache}
+    logical = {"tokens": tok_logical, "idx": (),
+               "cache": cache_logical}
+    return batch, logical
+
+
+def cache_logical_axes(cfg: ModelConfig, cache):
+    """KV caches shard over batch (+ kv_heads); states over batch."""
+    def axes_for(path, leaf):
+        nd = len(leaf.shape)
+        name = path[-1]
+        if name in ("k", "v"):          # (L,B,T,KV,hd)
+            return ("layers", "batch", "kv_seq", "kv_heads", None)
+        if name == "c_kv":               # (L,B,T,r)
+            return ("layers", "batch", "kv_seq", None)
+        if name == "k_rope":             # (L,B,T,1,dr)
+            return ("layers", "batch", "kv_seq", None, None)
+        if name == "pos":
+            return ("layers", None)
+        if name == "ssm":                # (L,B,H,P,N)
+            return ("layers", "batch", "heads", None, None)
+        if name == "conv":               # (L,B,K-1,C)
+            return ("layers", "batch", None, "mlp")
+        if name == "h":                  # (L,B,w)
+            return ("layers", "batch", "mlp")
+        return tuple([None] * nd)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: axes_for(
+            tuple(getattr(p, "key", getattr(p, "idx", None))
+                  for p in path), leaf), cache)
+
+
+# ---------------------------------------------------------------------------
+# parameter / optimizer state
+# ---------------------------------------------------------------------------
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: optim.OptConfig):
+    layout = model_layout(cfg)
+    params = abstract_params(layout, cfg.param_dtype)
+    pspecs = spec_tree(layout)
+    opt_state = jax.eval_shape(partial(optim.init, opt_cfg), params)
+    # moments/factors inherit the param logical axes
+    ospecs = _opt_specs(opt_cfg, pspecs, opt_state)
+    return params, pspecs, opt_state, ospecs
+
+
+def _opt_specs(opt_cfg, pspecs, opt_state):
+    if opt_cfg.kind == "adafactor":
+        def fspec(lg):
+            # row: drop last dim; col: drop second-to-last
+            if len(lg) >= 2:
+                return {"row": tuple(lg[:-1]), "col": tuple(lg[:-2] + lg[-1:])}
+            return {"v": tuple(lg)}
+        f = jax.tree.map(fspec, pspecs, is_leaf=lambda x: isinstance(x, tuple))
+        return {"f": f, "count": ()}
+    return {"m": pspecs, "v": pspecs, "count": ()}
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: optim.OptConfig, key):
+    layout = model_layout(cfg)
+    params = init_params(layout, key, cfg.param_dtype)
+    return params, optim.init(opt_cfg, params)
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: optim.OptConfig,
+                    grad_accum: int = 1):
+    """(params, opt_state, batch) → (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        if grad_accum > 1:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, argnums=1,
+                                               has_aux=True)(cfg, params, mb)
+                return (jax.tree.map(jnp.add, gacc, g), lacc + l), None
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = {"loss": loss / grad_accum}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, argnums=1, has_aux=True)(cfg, params, batch)
+        new_params, new_opt, gnorm = optim.update(opt_cfg, grads, opt_state,
+                                                  params)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, total_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        logits, cache = dec.prefill(
+            cfg, params, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), total_len=total_len)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, batch):
+        logits, cache = dec.decode_step(cfg, params, batch["cache"],
+                                        batch["tokens"], batch["idx"])
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)
+        return next_tok, logits, cache
+    return decode_step

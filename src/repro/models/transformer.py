@@ -1,0 +1,409 @@
+"""Decoder-only transformer substrate: norms, RoPE, GQA flash attention,
+GLU MLPs, layer-scanned assembly, prefill/decode with KV caches.
+
+All tensor programs are pure functions of (cfg, params, inputs); sharding
+is expressed through logical-axis constraints (repro.sharding) so the same
+code lowers on 1 device, a (16,16) pod, or the (2,16,16) two-pod mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import Layout, ModelConfig, ParamDef
+from repro.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) *
+            (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def norm(cfg: ModelConfig, x, scale):
+    return rmsnorm(x, scale) if cfg.norm == "rmsnorm" else layernorm(x, scale)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, D), positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angle = positions[..., :, None, None].astype(jnp.float32) * freq  # (...,S,1,half)
+    sin, cos = jnp.sin(angle), jnp.cos(angle)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def act_fn(cfg: ModelConfig, gate, up):
+    if cfg.act == "swiglu":
+        return jax.nn.silu(gate) * up
+    if cfg.act == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    return jax.nn.gelu(gate, approximate=True)  # plain gelu (no up path)
+
+
+# ---------------------------------------------------------------------------
+# flash-style chunked attention (pure JAX; O(S·W) memory)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool, q_offset=0,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    kv_chunk: int = 1024):
+    """Online-softmax attention, scanned over KV chunks.
+
+    q: (B, Sq, H, Dk)   k: (B, Sk, KV, Dk)   v: (B, Sk, KV, Dv)
+    KV heads are broadcast to H (GQA).  ``q_offset`` is the absolute
+    position of q[0] (decode / chunked prefill).  ``window`` limits
+    attention to the last `window` positions (sliding-window attention).
+    Never materializes the (Sq, Sk) score matrix — peak live memory per
+    step is (B, H, Sq, kv_chunk), which is what makes the 32k-prefill and
+    500k shapes lowerable.
+    """
+    B, Sq, H, Dk = q.shape
+    _, Sk, KV, Dv = (*k.shape[:3], v.shape[-1])
+    rep = H // KV
+    scale = 1.0 / math.sqrt(Dk)
+    q = (q * scale).astype(q.dtype)
+    nchunk = -(-Sk // kv_chunk)
+    pad = nchunk * kv_chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunk, kv_chunk, KV, Dk)
+    vc = v.reshape(B, nchunk, kv_chunk, KV, Dv)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, cidx = inp
+        kpos = cidx * kv_chunk + jnp.arange(kv_chunk)
+        kb = jnp.repeat(kb, rep, axis=2)               # GQA: KV → H heads
+        vb = jnp.repeat(vb, rep, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb,
+                       preferred_element_type=jnp.float32)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = kpos[None, :] <= qpos[:, None] if causal else \
+            jnp.ones((Sq, kv_chunk), bool)
+        if window is not None:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        mask = mask & (kpos[None, :] < Sk)             # padding
+        # additive (Sq, K) f32 mask: a boolean `where` here broadcasts a
+        # pred[B,H,Sq,K] select operand that XLA then hoists across the KV
+        # scan — a (chunks,B,H,Sq,K) temp (~400 GB/dev at 4k train shapes).
+        # The additive form keeps the mask (Sq,K) and fuses into the scores.
+        s = s + jnp.where(mask, 0.0, -1e30).astype(jnp.float32)[None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, Dv), jnp.float32)
+    kcs = jnp.moveaxis(kc, 1, 0)
+    vcs = jnp.moveaxis(vc, 1, 0)
+    # remat the chunk body: otherwise scan stacks the per-chunk score
+    # matrices (chunks,B,H,Sq,K) for the backward pass — the exact buffer
+    # flash attention exists to avoid
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0),
+        (kcs, vcs, jnp.arange(nchunk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)    # (B, Sq, H, Dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def attn_layout(cfg: ModelConfig, prefix: str, layers: int) -> Layout:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    L = (layers,)
+    ll = ("layers",)
+    out = {
+        f"{prefix}/wq": ParamDef(L + (d, H * hd), ll + ("fsdp", "heads")),
+        f"{prefix}/wk": ParamDef(L + (d, KV * hd), ll + ("fsdp", "kv_heads")),
+        f"{prefix}/wv": ParamDef(L + (d, KV * hd), ll + ("fsdp", "kv_heads")),
+        f"{prefix}/wo": ParamDef(L + (H * hd, d), ll + ("heads", "fsdp")),
+    }
+    if cfg.qk_norm:
+        out[f"{prefix}/q_norm"] = ParamDef(L + (hd,), ll + (None,), "zeros")
+        out[f"{prefix}/k_norm"] = ParamDef(L + (hd,), ll + (None,), "zeros")
+    return out
+
+
+def attn_apply(cfg: ModelConfig, p: Dict, x, positions, *,
+               cache=None, window=None):
+    """x: (B,S,d). cache: None (train/prefill-from-scratch) or dict with
+    k/v (B,T,KV,hd) + idx scalar (decode: S==1 appended at idx)."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, KV, hd)
+    v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    if cache is None:
+        o = flash_attention(q, k, v, causal=True, window=window,
+                            softcap=cfg.logit_softcap)
+        new_cache = (k, v)
+    else:
+        # Decode with a (possibly ring-buffer) cache.  cache = dict with
+        #   k/v: (B,T,KV,hd), pos: (T,) absolute position per slot (−1 =
+        #   empty), slot: write index (= idx, or idx % T for windowed
+        #   caches so a 2048-window arch never allocates a 500k cache).
+        ck, cv, cpos, slot = cache["k"], cache["v"], cache["pos"], \
+            cache["slot"]
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cpos, positions[0].astype(jnp.int32), (slot,))
+        rep = H // KV
+        kk = jnp.repeat(ck, rep, axis=2)
+        vv = jnp.repeat(cv, rep, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q / math.sqrt(hd), kk,
+                       preferred_element_type=jnp.float32)
+        if cfg.logit_softcap:
+            s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+        qpos = positions[0]                                # (S,) S==1
+        mask = (cpos[None, :] >= 0) & (cpos[None, :] <= qpos[:, None])
+        if window is not None:
+            mask = mask & (cpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(vv.dtype)
+        o = jnp.moveaxis(
+            jnp.einsum("bhqk,bkhd->bhqd", w, vv,
+                       preferred_element_type=jnp.float32), 1, 2
+        ).astype(x.dtype)
+        new_cache = (ck, cv, cpos)
+    o = o.reshape(B, S, H * hd)
+    return o @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_layout(cfg: ModelConfig, prefix: str, layers: int,
+               width: Optional[int] = None) -> Layout:
+    d = cfg.d_model
+    ff = width or cfg.d_ff
+    L = (layers,)
+    ll = ("layers",)
+    out = {f"{prefix}/w_up": ParamDef(L + (d, ff), ll + ("fsdp", "mlp")),
+           f"{prefix}/w_down": ParamDef(L + (ff, d), ll + ("mlp", "fsdp"))}
+    if cfg.act in ("swiglu", "geglu"):
+        out[f"{prefix}/w_gate"] = ParamDef(L + (d, ff), ll + ("fsdp", "mlp"))
+    return out
+
+
+def mlp_apply(cfg: ModelConfig, p: Dict, x):
+    up = x @ p["w_up"]
+    if "w_gate" in p:
+        h = act_fn(cfg, x @ p["w_gate"], up)
+    else:
+        h = act_fn(cfg, up, up)
+    h = constrain(h, "batch", "seq", "mlp")
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# dense decoder block
+# ---------------------------------------------------------------------------
+
+def dense_block_layout(cfg: ModelConfig, layers: int) -> Layout:
+    out = {}
+    out.update(attn_layout(cfg, "attn", layers))
+    out.update(mlp_layout(cfg, "mlp", layers))
+    out["ln1"] = ParamDef((layers, cfg.d_model), ("layers", None), "zeros")
+    out["ln2"] = ParamDef((layers, cfg.d_model), ("layers", None), "zeros")
+    return out
+
+
+def dense_block_apply(cfg: ModelConfig, p: Dict, x, positions, cache=None):
+    h, kv = attn_apply(cfg, p["attn"], norm(cfg, x, p["ln1"]), positions,
+                       cache=cache, window=cfg.sliding_window)
+    x = x + h
+    x = x + mlp_apply(cfg, p["mlp"], norm(cfg, x, p["ln2"]))
+    x = constrain(x, "batch", "seq", "embed")
+    return x, kv
+
+
+# ---------------------------------------------------------------------------
+# model assembly
+# ---------------------------------------------------------------------------
+
+def model_layout(cfg: ModelConfig) -> Layout:
+    from repro.models import griffin, moe, ssm  # cycle-free: they import base only
+
+    out: Layout = {
+        "embed/tok": ParamDef((cfg.vocab_padded, cfg.d_model),
+                              ("vocab", "embed_fsdp"), "small"),
+        "final_norm": ParamDef((cfg.d_model,), (None,), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_padded),
+                                  ("embed_fsdp", "vocab"))
+    if cfg.family == "dense":
+        for k, v in dense_block_layout(cfg, cfg.n_layers).items():
+            out[f"blocks/{k}"] = v
+    elif cfg.family in ("moe", "mla_moe"):
+        for k, v in moe.block_layout(cfg).items():
+            out[f"blocks/{k}"] = v
+        if cfg.mtp_depth:
+            for k, v in moe.mtp_layout(cfg).items():
+                out[f"mtp/{k}"] = v
+    elif cfg.family == "ssm":
+        for k, v in ssm.block_layout(cfg, cfg.n_layers).items():
+            out[f"blocks/{k}"] = v
+    elif cfg.family == "griffin":
+        for k, v in griffin.block_layout(cfg).items():
+            out[f"blocks/{k}"] = v
+    else:
+        raise ValueError(cfg.family)
+    return out
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    emb = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    if cfg.embed_scale:
+        emb = emb * jnp.asarray(math.sqrt(cfg.d_model), emb.dtype)
+    return emb.astype(jnp.dtype(cfg.compute_dtype))
+
+
+def sinusoidal_pos(positions, d: int, dtype):
+    """Classic sin/cos position embedding (musicgen: no RoPE)."""
+    half = d // 2
+    freq = jnp.exp(-math.log(10_000.0) *
+                   jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    out = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    if out.shape[-1] < d:
+        out = jnp.pad(out, ((0, 0),) * (out.ndim - 1) + (0, d - out.shape[-1]))
+    return out.astype(dtype)
+
+
+def add_positions(cfg: ModelConfig, x, positions):
+    """Additive position signal for archs without RoPE."""
+    if cfg.use_rope or cfg.family in ("ssm",):
+        return x
+    return x + sinusoidal_pos(positions, cfg.d_model, x.dtype)
+
+
+def unembed(cfg: ModelConfig, params, x):
+    table = params["embed"]["tok"].T if cfg.tie_embeddings else \
+        params["lm_head"]
+    logits = x @ table.astype(x.dtype)
+    if cfg.vocab_padded != cfg.vocab:
+        # TP-padding slots never win: mask to −∞ (loss + argmax safe)
+        pad_mask = jnp.where(jnp.arange(cfg.vocab_padded) < cfg.vocab,
+                             0.0, -1e30).astype(logits.dtype)
+        logits = logits + pad_mask
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def _scan_blocks(cfg: ModelConfig, block_params, x, positions, apply_fn):
+    """jax.lax.scan over stacked layers (one traced layer → small HLO)."""
+    base = partial(apply_fn, cfg)
+    fn = jax.checkpoint(base, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else base
+
+    def body(h, p_l):
+        h, _ = fn(p_l, h, positions)
+        return h, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, block_params)
+        return x
+    for i in range(cfg.n_layers):
+        p_l = jax.tree.map(lambda a: a[i], block_params)
+        x, _ = body(x, p_l)
+    return x
+
+
+def forward(cfg: ModelConfig, params, tokens=None, embeds=None):
+    """Full-sequence forward → logits (train / prefill-logits path)."""
+    from repro.models import griffin, moe, ssm
+    from repro.models.base import cast_floats
+
+    params = cast_floats(params, cfg.compute_dtype)
+    if cfg.input_mode == "embeddings":
+        x = embeds.astype(jnp.dtype(cfg.compute_dtype))
+        if cfg.embed_scale:
+            x = x * math.sqrt(cfg.d_model)
+    else:
+        x = embed_tokens(cfg, params, tokens)
+    x = constrain(x, "batch", "seq", "embed")
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = add_positions(cfg, x, positions)
+
+    aux = {}
+    if cfg.family == "dense":
+        x = _scan_blocks(cfg, params["blocks"], x, positions,
+                         dense_block_apply)
+    elif cfg.family in ("moe", "mla_moe"):
+        x, aux = moe.forward_blocks(cfg, params["blocks"], x, positions)
+    elif cfg.family == "ssm":
+        x = ssm.forward_blocks(cfg, params["blocks"], x)
+    elif cfg.family == "griffin":
+        x = griffin.forward_blocks(cfg, params["blocks"], x, positions)
+    x = norm(cfg, x, params["final_norm"])
+    logits = unembed(cfg, params, x)
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """Causal LM loss (+ MoE aux loss, + MTP loss for deepseek)."""
+    from repro.models import moe
+
+    logits, aux = forward(
+        cfg, params,
+        tokens=batch.get("tokens"), embeds=batch.get("embeds"))
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold)
+    mask = batch.get("mask", jnp.ones_like(nll))
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    metrics = {"nll": loss}
+    if aux.get("lb_loss") is not None:
+        loss = loss + 0.01 * aux["lb_loss"]
+        metrics["lb_loss"] = aux["lb_loss"]
+    if cfg.mtp_depth and "mtp" in params:
+        mtp_loss = moe.mtp_loss(cfg, params, batch, aux["h_final"])
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics

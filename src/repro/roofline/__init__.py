@@ -1,0 +1,9 @@
+"""Roofline analysis: HLO parsing + v5e hardware model."""
+from repro.roofline.hlo import analyze, HloStats, shape_bytes
+from repro.roofline.model import (ICI_BW, HBM_BW, PEAK_FLOPS_BF16,
+                                  RooflineTerms, fmt_seconds,
+                                  model_flops_for, roofline)
+
+__all__ = ["analyze", "HloStats", "shape_bytes", "ICI_BW", "HBM_BW",
+           "PEAK_FLOPS_BF16", "RooflineTerms", "fmt_seconds",
+           "model_flops_for", "roofline"]

@@ -1,0 +1,119 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Traffic/FLOP breakdown for one dry-run cell: which ops dominate the
+memory and compute roofline terms.
+
+  PYTHONPATH=src python -m repro.roofline.breakdown \
+      --arch deepseek-v3-671b --shape train_4k --mesh single --top 20
+"""
+import argparse
+import re
+from collections import defaultdict
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    from repro.launch import dryrun as dr
+    from repro.roofline.hlo import (dot_flops, execution_multipliers,
+                                    parse_hlo, shape_bytes, _operand_bytes,
+                                    _OPCODES_SKIP_TRAFFIC)
+    from repro import sharding
+    from repro.models import (abstract_train_state, input_specs,
+                              make_train_step, make_prefill_step,
+                              make_decode_step, SHAPES)
+    from repro.configs import get_config
+    import jax
+
+    cfg = get_config(args.arch)
+    mesh = dr.build_mesh(args.mesh)
+    rules = dr.rules_for(args.arch, args.shape)
+    s = SHAPES[args.shape]
+    with sharding.use_mesh(mesh, rules):
+        batch, blg = input_specs(cfg, args.shape)
+        bsh = sharding.tree_shardings(blg, mesh, rules, shape_tree=batch)
+        oc = dr.opt_config_for(args.arch)
+        params, pspecs, opt_state, ospecs = abstract_train_state(cfg, oc)
+        psh = sharding.tree_shardings(pspecs, mesh, rules, shape_tree=params)
+        if s.kind == "train":
+            osh = sharding.tree_shardings(ospecs, mesh, rules,
+                                          shape_tree=opt_state)
+            fn = make_train_step(cfg, oc)
+            jt = jax.jit(fn, in_shardings=(psh, osh, bsh),
+                         out_shardings=(psh, osh, None),
+                         donate_argnums=(0, 1))
+            compiled = jt.lower(params, opt_state, batch).compile()
+        elif s.kind == "prefill":
+            fn = make_prefill_step(cfg, total_len=s.seq_len)
+            compiled = jax.jit(fn, in_shardings=(psh, bsh)).lower(
+                params, batch).compile()
+        else:
+            fn = make_decode_step(cfg)
+            compiled = jax.jit(fn, in_shardings=(psh, bsh)).lower(
+                params, batch).compile()
+
+    text = compiled.as_text()
+    comps, types, entry = parse_hlo(text)
+    mult = execution_multipliers(comps, entry)
+    traffic = []
+    flops = []
+    coll = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0:
+            continue
+        for op in comp.ops:
+            meta = re.search(r'op_name="([^"]*)"', op.rest)
+            tag = meta.group(1)[-70:] if meta else op.name[-40:]
+            if op.opcode in ("dot", "convolution"):
+                flops.append((m * dot_flops(op, types), m, op.opcode,
+                              op.result_type[:48], tag))
+            from repro.roofline.hlo import COLLECTIVES
+            if op.opcode in COLLECTIVES:
+                coll.append((m * _operand_bytes(op, types), m, op.opcode,
+                             op.result_type[:48], tag))
+            if op.opcode in _OPCODES_SKIP_TRAFFIC:
+                continue
+            if op.opcode in ("dynamic-slice", "slice"):
+                b = shape_bytes(op.result_type)
+            elif op.opcode == "dynamic-update-slice":
+                names = op.operand_names()
+                upd = types.get(names[1]) if len(names) > 1 else None
+                b = 2 * shape_bytes(upd) if upd else \
+                    shape_bytes(op.result_type)
+            elif op.opcode in ("gather",):
+                b = 2 * shape_bytes(op.result_type)
+            elif op.opcode in ("scatter",):
+                names = op.operand_names()
+                upd = types.get(names[2]) if len(names) > 2 else None
+                b = 3 * shape_bytes(upd) if upd else \
+                    shape_bytes(op.result_type)
+            else:
+                b = shape_bytes(op.result_type) + _operand_bytes(op, types)
+            traffic.append((m * b, m, op.opcode, op.result_type[:48], tag))
+
+    for name, rows, unit in (("TRAFFIC", traffic, 1e12),
+                             ("DOT FLOPS", flops, 1e12),
+                             ("COLLECTIVE", coll, 1e9)):
+        rows.sort(reverse=True)
+        total = sum(r[0] for r in rows)
+        print(f"\n== {name}: total {total / unit:.2f} "
+              f"{'TB' if unit == 1e12 else 'GB'} per device ==")
+        # also aggregate by op_name tag
+        agg = defaultdict(float)
+        for v, m, opc, rt, tag in rows:
+            agg[(opc, tag.split("/")[-1][:40])] += v
+        for (opc, tag), v in sorted(agg.items(), key=lambda kv: -kv[1])[
+                :args.top]:
+            print(f"  {v / unit:10.3f}  {opc:22s} {tag}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,314 @@
+"""HLO-text analyzer: loop-aware collective bytes, dot FLOPs, traffic.
+
+``compiled.cost_analysis()`` undercounts programs with ``while`` loops
+(scan-over-layers bodies are costed once), and collective bytes are not
+reported at all.  This module parses the post-optimization HLO text:
+
+  1. split into computations; build a module-wide name → result-type map
+     (operand references in XLA's printer are bare names);
+  2. recover ``while`` trip counts from the loop-condition's comparison
+     constant (scan emits ``compare(iter, constant(L)), direction=LT``);
+  3. propagate execution multipliers through the call graph
+     (entry ×1 → while body ×trip_count → nested bodies multiply);
+  4. aggregate per-device collective bytes (all-reduce / all-gather /
+     reduce-scatter / all-to-all / collective-permute, sync or -start),
+     dot/conv FLOPs, and a bytes-touched traffic estimate.
+
+Everything is per-device (the HLO is the SPMD partitioned program);
+multiply by chip count for globals (repro.roofline.model does).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# "%name = TYPE opcode(...)..." — TYPE may be a tuple with nested parens-free
+# brackets; opcode is the last word before the first '(' that follows it.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->\s*(.*)\{\s*$")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "ragged-all-to-all", "reduce-scatter-start",
+    "all-to-all-start",
+}
+
+_OPCODES_SKIP_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call",
+}
+
+# ops a TPU backend fuses into consumers (they cost no HBM traffic of
+# their own); the CPU backend leaves many of these unfused at top level,
+# so raw traffic is an upper bound and `traffic_bytes_fused` approximates
+# the TPU roofline by charging only materialization points
+_OPCODES_FUSIBLE = {
+    "add", "subtract", "multiply", "divide", "select", "compare", "convert",
+    "exponential", "exponential-minus-one", "tanh", "rsqrt", "sqrt",
+    "maximum", "minimum", "negate", "abs", "power", "log", "log-plus-one",
+    "and", "or", "not", "xor", "clamp", "broadcast", "iota", "sign",
+    "floor", "ceil", "round-nearest-afz", "is-finite", "cosine", "sine",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "bitcast-convert", "reduce-precision", "map", "atan2", "remainder",
+    "pad", "reverse", "real", "imag", "expm1", "log1p", "logistic",
+    "popcnt", "clz", "erf",
+}
+# for these, charge the result only (producer chains fuse in)
+_OPCODES_RESULT_ONLY_FUSED = {"reduce", "fusion", "copy", "transpose",
+                              "concatenate", "reshape", "broadcast"}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of all arrays in a (possibly tuple) type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_type: str
+    rest: str            # everything after "opcode(" — operands AND attrs
+
+    def operand_names(self) -> List[str]:
+        # names before attrs begin; attrs contain '=' keys — cheap heuristic:
+        # take %refs appearing before ", condition=" / ", body=" etc. is
+        # unnecessary: called computations are also %refs, but they are
+        # resolved separately and absent from the type map's array entries.
+        return _REF_RE.findall(self.rest)
+
+    def called(self) -> Dict[str, str]:
+        out = {}
+        for key in ("to_apply", "body", "condition"):
+            m = re.search(key + r"=%?([\w.\-]+)", self.rest)
+            if m:
+                out[key] = m.group(1)
+        mb = re.search(r"branch_computations=\{([^}]*)\}", self.rest)
+        if mb:
+            for i, name in enumerate(_REF_RE.findall(mb.group(1))):
+                out[f"branch{i}"] = name
+        mc = re.search(r"calls=%?([\w.\-]+)", self.rest)
+        if mc:
+            out["calls"] = mc.group(1)
+        return out
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+
+
+def parse_hlo(text: str):
+    """Returns (computations, name→result_type map, entry name)."""
+    comps: Dict[str, Computation] = {}
+    types: Dict[str, str] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None or line.rstrip().endswith("{"):
+            mc = _COMP_RE.match(line)
+            if mc:
+                is_entry, name, args, _ret = mc.groups()
+                cur = Computation(name, [])
+                comps[name] = cur
+                if is_entry:
+                    entry = name
+                # header params: "pname: TYPE" pairs
+                for pm in re.finditer(r"([\w.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                      args):
+                    types[pm.group(1)] = pm.group(2)
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            name, rtype, opcode, rest = mo.groups()
+            op = Op(name, opcode, rtype, rest)
+            cur.ops.append(op)
+            types[name] = rtype
+    return comps, types, entry
+
+
+# ---------------------------------------------------------------------------
+# trip counts and execution multipliers
+# ---------------------------------------------------------------------------
+
+def trip_count(cond: Computation, default: int = 1) -> int:
+    """Largest integer constant in the loop-condition computation (scan
+    conditions are `iter < L`)."""
+    best = None
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.match(r"\s*(-?\d+)\s*\)", op.rest)
+            if m:
+                v = int(m.group(1))
+                if best is None or v > best:
+                    best = v
+    return best if best and best > 0 else default
+
+
+def execution_multipliers(comps, entry: str) -> Dict[str, float]:
+    mult: Dict[str, float] = defaultdict(float)
+    if entry not in comps:
+        return {}
+    work = [(entry, 1.0)]
+    while work:
+        cname, m = work.pop()
+        mult[cname] += m
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            called = op.called()
+            if op.opcode == "while":
+                cond = called.get("condition")
+                body = called.get("body")
+                tc = trip_count(comps[cond]) if cond in comps else 1
+                if body in comps:
+                    work.append((body, m * tc))
+                if cond in comps:
+                    work.append((cond, m * (tc + 1)))
+            else:
+                for key, c in called.items():
+                    if c in comps:
+                        work.append((c, m))
+    return dict(mult)
+
+
+# ---------------------------------------------------------------------------
+# aggregate metrics
+# ---------------------------------------------------------------------------
+
+def dot_flops(op: Op, types: Dict[str, str]) -> int:
+    """2 × prod(result dims) × prod(contracting dims of lhs)."""
+    res = _shape_dims(op.result_type)
+    names = op.operand_names()
+    if res is None or not names:
+        return 0
+    lhs_t = types.get(names[0])
+    if lhs_t is None:
+        return 0
+    lhs = _shape_dims(lhs_t)
+    if lhs is None:
+        return 0
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    contract = [int(d) for d in m.group(1).split(",") if d] if m else []
+    k = 1
+    for d in contract:
+        if d < len(lhs[1]):
+            k *= lhs[1][d]
+    n = 1
+    for d in res[1]:
+        n *= d
+    return 2 * n * k
+
+
+def _operand_bytes(op: Op, types: Dict[str, str]) -> int:
+    total = 0
+    for name in op.operand_names():
+        t = types.get(name)
+        if t:
+            total += shape_bytes(t)
+    return total
+
+
+@dataclasses.dataclass
+class HloStats:
+    collective_bytes: float = 0.0
+    collective_bytes_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_count: int = 0
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0     # Σ (operands + results) over real ops
+    traffic_bytes_fused: float = 0.0  # TPU-fusion-adjusted estimate
+    while_trip_counts: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+
+
+def analyze(text: str) -> HloStats:
+    comps, types, entry = parse_hlo(text)
+    mult = execution_multipliers(comps, entry)
+    stats = HloStats(collective_bytes_by_kind=defaultdict(float))
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.opcode in COLLECTIVES:
+                # operand list stops at the first attr key; take refs before
+                # the first '=' that's outside metadata … simpler: operands
+                # of collectives are plain arrays defined in the module
+                b = _operand_bytes(op, types)
+                stats.collective_bytes += m * b
+                stats.collective_bytes_by_kind[op.opcode] += m * b
+                stats.collective_count += max(int(m), 1)
+            elif op.opcode in ("dot", "convolution"):
+                stats.dot_flops += m * dot_flops(op, types)
+            if op.opcode not in _OPCODES_SKIP_TRAFFIC:
+                # slice-type ops touch only the slice, not the full operand
+                if op.opcode in ("dynamic-slice", "slice"):
+                    b = shape_bytes(op.result_type)
+                elif op.opcode == "dynamic-update-slice":
+                    names = op.operand_names()
+                    upd = types.get(names[1]) if len(names) > 1 else None
+                    b = 2 * shape_bytes(upd) if upd else \
+                        shape_bytes(op.result_type)
+                elif op.opcode in ("gather",):
+                    b = 2 * shape_bytes(op.result_type)
+                elif op.opcode in ("scatter",):
+                    names = op.operand_names()
+                    upd = types.get(names[2]) if len(names) > 2 else None
+                    b = 3 * shape_bytes(upd) if upd else \
+                        shape_bytes(op.result_type)
+                else:
+                    b = shape_bytes(op.result_type) + \
+                        _operand_bytes(op, types)
+                stats.traffic_bytes += m * b
+                if op.opcode in _OPCODES_FUSIBLE:
+                    bf = 0.0
+                elif op.opcode in _OPCODES_RESULT_ONLY_FUSED:
+                    bf = shape_bytes(op.result_type)
+                else:
+                    bf = b
+                stats.traffic_bytes_fused += m * bf
+            if op.opcode == "while":
+                cond = op.called().get("condition")
+                if cond in comps:
+                    stats.while_trip_counts[op.name] = trip_count(comps[cond])
+    stats.collective_bytes_by_kind = dict(stats.collective_bytes_by_kind)
+    return stats

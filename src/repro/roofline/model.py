@@ -1,0 +1,88 @@
+"""Three-term roofline model for TPU v5e pods.
+
+  compute    = FLOPs_global    / (chips × 197 TF/s bf16)
+  memory     = bytes_global    / (chips × 819 GB/s)
+  collective = coll_bytes_glob / (chips × 50 GB/s/link)
+
+The HLO the dry-run produces is the per-device SPMD program, so per-device
+quantities × chips give the globals (the formulas then reduce to
+per-device / per-chip-rate, as they must).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # B/s per chip
+ICI_BW = 50e9                 # B/s per link (≈ per-chip injection here)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_global: float
+    bytes_global: float
+    collective_bytes_global: float
+    model_flops: float            # 6·N(active)·D
+    useful_ratio: float           # model_flops / flops_global
+    bottleneck: str = ""
+    step_time_s: float = 0.0      # max of the three (no-overlap bound)
+    mfu: float = 0.0              # model_flops / (step_time × chips × peak)
+
+    def finish(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        self.step_time_s = max(terms.values())
+        denom = self.step_time_s * PEAK_FLOPS_BF16
+        self.mfu = (self.model_flops / (self.flops_global /
+                                        max(self.flops_global, 1e-30)))
+        # mfu = useful flops / (chips·peak·time); flops_global already
+        # includes the chips factor via per-device × chips
+        return self
+
+
+def roofline(per_device_flops: float, per_device_bytes: float,
+             per_device_collective_bytes: float, chips: int,
+             model_flops: float) -> RooflineTerms:
+    fg = per_device_flops * chips
+    bg = per_device_bytes * chips
+    cg = per_device_collective_bytes * chips
+    t = RooflineTerms(
+        compute_s=fg / (chips * PEAK_FLOPS_BF16),
+        memory_s=bg / (chips * HBM_BW),
+        collective_s=cg / (chips * ICI_BW),
+        flops_global=fg,
+        bytes_global=bg,
+        collective_bytes_global=cg,
+        model_flops=model_flops,
+        useful_ratio=model_flops / max(fg, 1e-30),
+    )
+    t.finish()
+    t.mfu = model_flops / max(chips * PEAK_FLOPS_BF16 * t.step_time_s, 1e-30)
+    return t
+
+
+def model_flops_for(cfg, shape_kind: str, seq_len: int, global_batch: int,
+                    mtp: bool = False) -> float:
+    """6·N_active·D (train) or 2·N_active·D (inference)."""
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        d = seq_len * global_batch
+        return 6.0 * n * d
+    if shape_kind == "prefill":
+        d = seq_len * global_batch
+        return 2.0 * n * d
+    # decode: one token per sequence
+    return 2.0 * n * global_batch
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s * 1e6:.1f}µs"

@@ -1,0 +1,87 @@
+"""Unit tests for the segmented last-writer scans (core.batch)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batch import seg_last_write_scan, compact, sort_queries
+
+
+def ref_scans(newseg, is_write, val, tomb):
+    """O(B²) reference for the segmented last-write scans."""
+    B = len(newseg)
+    inc, exc = [], []
+    for i in range(B):
+        start = i
+        while start > 0 and not newseg[start]:
+            start -= 1
+        # exclusive: writes in [start, i)
+        e = (False, 0, False)
+        for j in range(start, i):
+            if is_write[j]:
+                e = (True, val[j], tomb[j])
+        exc.append(e)
+        if is_write[i]:
+            inc.append((True, val[i], tomb[i]))
+        else:
+            inc.append(e if e[0] else (False, val[i] if False else 0, False))
+        # fix: inclusive last write in [start, i]
+        t = (False, 0, False)
+        for j in range(start, i + 1):
+            if is_write[j]:
+                t = (True, val[j], tomb[j])
+        inc[-1] = t
+    return inc, exc
+
+
+def test_seg_scan_matches_quadratic_ref(rng):
+    for _ in range(10):
+        B = 32
+        newseg = rng.random(B) < 0.3
+        newseg[0] = True
+        is_write = rng.random(B) < 0.5
+        val = rng.integers(0, 100, B).astype(np.int32)
+        tomb = rng.random(B) < 0.3
+        (ih, iv, it), (eh, ev, et) = seg_last_write_scan(
+            jnp.asarray(newseg), jnp.asarray(is_write), jnp.asarray(val),
+            jnp.asarray(tomb))
+        inc_ref, exc_ref = ref_scans(newseg, is_write, val, tomb)
+        for i in range(B):
+            assert bool(ih[i]) == inc_ref[i][0]
+            if inc_ref[i][0]:
+                assert int(iv[i]) == inc_ref[i][1]
+                assert bool(it[i]) == inc_ref[i][2]
+            assert bool(eh[i]) == exc_ref[i][0], i
+            if exc_ref[i][0]:
+                assert int(ev[i]) == exc_ref[i][1]
+                assert bool(et[i]) == exc_ref[i][2]
+
+
+def test_compact(rng):
+    mask = np.array([1, 0, 1, 1, 0, 1], bool)
+    arr = np.arange(6, dtype=np.int32)
+    cnt, dropped, (out,) = compact(jnp.asarray(mask), 8, jnp.asarray(arr),
+                                   fill_values=(-1,))
+    assert int(cnt) == 4 and not bool(dropped)
+    assert np.asarray(out)[:4].tolist() == [0, 2, 3, 5]
+    assert np.all(np.asarray(out)[4:] == -1)
+
+
+def test_compact_overflow():
+    mask = jnp.ones(6, bool)
+    cnt, dropped, (out,) = compact(mask, 4, jnp.arange(6, dtype=jnp.int32),
+                                   fill_values=(-1,))
+    assert bool(dropped)
+    assert np.asarray(out).tolist() == [0, 1, 2, 3]
+
+
+def test_sort_queries_stable(rng):
+    B = 64
+    ops = rng.integers(0, 3, B).astype(np.int32)
+    keys = rng.integers(0, 10, B).astype(np.int32)
+    vals = np.arange(B, dtype=np.int32)
+    perm, so, sk, sv = sort_queries(jnp.asarray(ops), jnp.asarray(keys),
+                                    jnp.asarray(vals))
+    sk, perm = np.asarray(sk), np.asarray(perm)
+    assert np.array_equal(sk, np.sort(keys))
+    for key in np.unique(keys):
+        sub = perm[sk == key]
+        assert np.array_equal(sub, np.sort(sub))  # arrival order kept

@@ -1,0 +1,167 @@
+"""PIIndex vs the RefIndex oracle: unit + hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DELETE, INSERT, SEARCH, PIConfig, RefIndex, build, delete_batch, execute,
+    insert_batch, lookup, maybe_rebuild, needs_rebuild, range_agg, rebuild,
+    search_batch, traverse,
+)
+
+CFG = PIConfig(capacity=256, pending_capacity=96, fanout=4)
+
+
+def mk(rng, n=100, key_space=10_000):
+    keys = rng.choice(key_space, size=n, replace=False).astype(np.int32)
+    vals = np.arange(n, dtype=np.int32)
+    return build(CFG, jnp.asarray(keys), jnp.asarray(vals)), \
+        RefIndex.build(keys, vals), keys
+
+
+def check_batch(idx, ref, ops, ks, vs):
+    idx, (rf, rv) = execute(idx, jnp.asarray(ops), jnp.asarray(ks),
+                            jnp.asarray(vs))
+    expected = ref.execute(ops, ks, vs)
+    got = [int(rv[i]) if bool(rf[i]) else None for i in range(len(ops))]
+    assert got == expected
+    return idx
+
+
+def test_traverse_is_floor(rng):
+    idx, _, keys = mk(rng)
+    q = rng.integers(-5, 11_000, size=128).astype(np.int32)
+    pos = np.asarray(traverse(idx, jnp.asarray(q)))
+    sk = np.sort(keys)
+    want = np.searchsorted(sk, q, side="right") - 1
+    assert np.array_equal(pos, want)
+
+
+def test_lookup_matches_oracle(rng):
+    idx, ref, keys = mk(rng)
+    q = np.concatenate([keys[:20], rng.integers(0, 11_000, 40).astype(np.int32)])
+    f, v = lookup(idx, jnp.asarray(q))
+    for i, k in enumerate(q):
+        r = ref.search(k)
+        assert bool(f[i]) == (r is not None)
+        if r is not None:
+            assert int(v[i]) == r
+
+
+def test_mixed_batches_match_oracle(rng):
+    idx, ref, keys = mk(rng)
+    for _ in range(6):
+        B = 64
+        ops = rng.integers(0, 3, B).astype(np.int32)
+        ks = rng.choice(
+            np.concatenate([keys, rng.integers(0, 10_000, 50).astype(np.int32)]),
+            size=B).astype(np.int32)
+        vs = rng.integers(0, 1000, B).astype(np.int32)
+        idx = check_batch(idx, ref, ops, ks, vs)
+
+
+def test_intra_batch_visibility(rng):
+    """Insert→search→delete→search on the same key inside ONE batch."""
+    idx, ref, _ = mk(rng, n=10)
+    k = np.int32(5_000)  # not present
+    ops = np.array([INSERT, SEARCH, DELETE, SEARCH], np.int32)
+    ks = np.array([k, k, k, k], np.int32)
+    vs = np.array([7, 0, 0, 0], np.int32)
+    check_batch(idx, ref, ops, ks, vs)
+
+
+def test_delete_then_reinsert_across_batches(rng):
+    idx, ref, keys = mk(rng, n=20)
+    k = keys[0]
+    idx = check_batch(idx, ref, np.array([DELETE], np.int32),
+                      np.array([k]), np.array([0], np.int32))
+    idx = check_batch(idx, ref, np.array([SEARCH], np.int32),
+                      np.array([k]), np.array([0], np.int32))
+    idx = check_batch(idx, ref, np.array([INSERT], np.int32),
+                      np.array([k]), np.array([99], np.int32))
+    idx = check_batch(idx, ref, np.array([SEARCH], np.int32),
+                      np.array([k]), np.array([0], np.int32))
+
+
+def test_rebuild_preserves_state(rng):
+    idx, ref, keys = mk(rng)
+    B = 64
+    ops = rng.integers(0, 3, B).astype(np.int32)
+    ks = rng.choice(np.concatenate(
+        [keys, rng.integers(0, 10_000, 50).astype(np.int32)]),
+        size=B).astype(np.int32)
+    vs = rng.integers(0, 1000, B).astype(np.int32)
+    idx = check_batch(idx, ref, ops, ks, vs)
+    idx = rebuild(idx)
+    assert int(idx.pn) == 0 and int(idx.n_updates) == 0
+    allq = np.unique(np.concatenate([keys, ks]))
+    f, v = lookup(idx, jnp.asarray(allq))
+    for i, k in enumerate(allq):
+        r = ref.search(k)
+        assert bool(f[i]) == (r is not None)
+        if r is not None:
+            assert int(v[i]) == r
+
+
+def test_needs_rebuild_threshold(rng):
+    idx, ref, _ = mk(rng, n=100)
+    assert not bool(needs_rebuild(idx))
+    newk = (20_000 + np.arange(32)).astype(np.int32)
+    idx, _ = insert_batch(idx, jnp.asarray(newk),
+                          jnp.asarray(np.ones(32, np.int32)))
+    # 32 > 15% of 100 → daemon threshold tripped (paper §4.3.5)
+    assert bool(needs_rebuild(idx))
+    idx2 = maybe_rebuild(idx)
+    assert int(idx2.pn) == 0
+
+
+def test_range_agg_matches_oracle(rng):
+    idx, ref, keys = mk(rng)
+    # add some pending inserts so ranges cross both layers
+    newk = rng.choice(20_000, 30, replace=False).astype(np.int32) + 30_000
+    idx, _ = insert_batch(idx, jnp.asarray(newk),
+                          jnp.asarray(np.arange(30, dtype=np.int32)))
+    ref.execute(np.full(30, INSERT, np.int32), newk, np.arange(30, np.int32)) \
+        if False else [ref.data.__setitem__(int(k), i) for i, k in enumerate(newk)]
+    lo = np.array([0, 2_000, 29_000, 60_000], np.int32)
+    hi = np.array([2_500, 9_999, 50_000, 70_000], np.int32)
+    cnt, sm = range_agg(idx, jnp.asarray(lo), jnp.asarray(hi), 256)
+    for i in range(len(lo)):
+        pairs = ref.range(lo[i], hi[i])
+        assert int(cnt[i]) == len(pairs)
+        assert int(sm[i]) == sum(p[1] for p in pairs)
+
+
+def test_search_insert_delete_wrappers(rng):
+    idx, ref, keys = mk(rng, n=30)
+    idx, (f, v) = search_batch(idx, jnp.asarray(keys[:8]))
+    assert bool(np.all(np.asarray(f)))
+    idx, _ = delete_batch(idx, jnp.asarray(keys[:4]))
+    idx, (f, _) = search_batch(idx, jnp.asarray(keys[:8]))
+    assert not np.any(np.asarray(f)[:4]) and np.all(np.asarray(f)[4:])
+
+
+# ---------------------------------------------------------------------------
+# property-based: arbitrary op sequences match the oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_property_oracle_equivalence(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    n0 = data.draw(st.integers(0, 60))
+    keyspace = data.draw(st.sampled_from([50, 500, 100_000]))
+    keys = rng.choice(keyspace, size=min(n0, keyspace), replace=False) \
+        .astype(np.int32)
+    vals = np.arange(len(keys), dtype=np.int32)
+    idx = build(CFG, jnp.asarray(keys), jnp.asarray(vals))
+    ref = RefIndex.build(keys, vals)
+    for _ in range(data.draw(st.integers(1, 3))):
+        B = data.draw(st.sampled_from([4, 16, 64]))
+        ops = rng.integers(0, 3, B).astype(np.int32)
+        ks = rng.integers(0, keyspace, B).astype(np.int32)
+        vs = rng.integers(0, 100, B).astype(np.int32)
+        idx = check_batch(idx, ref, ops, ks, vs)
+        if bool(needs_rebuild(idx)):
+            idx = rebuild(idx)

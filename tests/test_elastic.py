@@ -1,0 +1,40 @@
+"""Elastic restart: a checkpoint written under one mesh restores (and
+reshards) onto a different mesh — pods can leave/join between runs."""
+from conftest import run_with_devices
+
+ELASTIC_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import checkpoint as ckpt_mod
+
+tmp = "/tmp/repro_elastic_test"
+import shutil, os
+shutil.rmtree(tmp, ignore_errors=True)
+
+# "run 1": 8-device mesh, params sharded 8-way on dim 0
+mesh8 = jax.make_mesh((8,), ("data",))
+x = jax.device_put(jnp.arange(64 * 4, dtype=jnp.float32).reshape(64, 4),
+                   NamedSharding(mesh8, P("data", None)))
+state = {"w": x, "step": jnp.int32(7)}
+mgr = ckpt_mod.CheckpointManager(tmp)
+mgr.save(7, state, blocking=True)
+
+# "run 2": the cluster shrank to 4 devices (2 pods left) → new mesh,
+# restore with the new sharding
+mesh4 = jax.make_mesh((4, 2), ("data", "model"))
+target = jax.tree.map(jnp.zeros_like, state)
+shardings = {"w": NamedSharding(mesh4, P("data", "model")),
+             "step": NamedSharding(mesh4, P())}
+step, restored = mgr.restore_latest(target, shardings)
+assert step == 7
+np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(x))
+# placed with the NEW sharding
+assert restored["w"].sharding.spec == P("data", "model")
+assert len(restored["w"].sharding.device_set) == 8
+print("OK")
+"""
+
+
+def test_elastic_reshard_on_restore():
+    out = run_with_devices(ELASTIC_SCRIPT, 8, timeout=600)
+    assert "OK" in out

@@ -1,0 +1,89 @@
+"""Hypothesis property tests on system invariants beyond the core oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PIConfig, build, rebuild, traverse
+from repro.core.distributed import dispatch_plan
+from repro.models.transformer import flash_attention
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_traverse_monotone_and_exact(data):
+    """traverse == searchsorted floor for arbitrary key sets / fanouts."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    n = data.draw(st.integers(1, 200))
+    fanout = data.draw(st.sampled_from([2, 4, 8, 16]))
+    keys = rng.choice(100_000, size=n, replace=False).astype(np.int32)
+    cfg = PIConfig(capacity=max(256, 2 * n), pending_capacity=64,
+                   fanout=fanout)
+    idx = build(cfg, jnp.asarray(keys), jnp.asarray(np.arange(n, dtype=np.int32)))
+    q = np.sort(rng.integers(-10, 100_010, size=64).astype(np.int32))
+    pos = np.asarray(traverse(idx, jnp.asarray(q)))
+    want = np.searchsorted(np.sort(keys), q, side="right") - 1
+    assert np.array_equal(pos, want)
+    assert np.all(np.diff(pos) >= 0)  # monotone in the query key
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_rebuild_idempotent(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    n = data.draw(st.integers(0, 100))
+    keys = rng.choice(10_000, size=n, replace=False).astype(np.int32)
+    cfg = PIConfig(capacity=256, pending_capacity=64, fanout=4)
+    idx = build(cfg, jnp.asarray(keys), jnp.asarray(np.arange(n, dtype=np.int32)))
+    r1 = rebuild(idx)
+    r2 = rebuild(r1)
+    for a, b in zip(jax.tree.leaves(r1), jax.tree.leaves(r2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_dispatch_plan_invariants(data):
+    """Every kept item lands in its own destination bucket exactly once;
+    per-destination counts never exceed capacity; drops are exactly the
+    over-capacity tail (PI Alg. 1/3 bounded buffers == MoE capacity)."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    B = data.draw(st.sampled_from([8, 64, 256]))
+    n_dest = data.draw(st.sampled_from([2, 4, 16]))
+    cap = data.draw(st.sampled_from([1, 4, 1000]))
+    dest = rng.integers(0, n_dest, B).astype(np.int32)
+    order, slot, keep, dropped = map(
+        np.asarray, dispatch_plan(jnp.asarray(dest), n_dest, cap))
+    # kept slots are unique and within their destination's range
+    ks = slot[keep]
+    assert len(np.unique(ks)) == len(ks)
+    d_sorted = dest[order]
+    assert np.all(ks // cap == d_sorted[keep])
+    # per-destination kept counts == min(demand, cap)
+    for d in range(n_dest):
+        demand = int((dest == d).sum())
+        got = int(((ks // cap) == d).sum())
+        assert got == min(demand, cap)
+    assert int(dropped) == B - int(keep.sum())
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_flash_attention_rows_sum_to_one(data):
+    """Attention output of constant-value V must be that constant —
+    softmax rows sum to 1 under any chunking/window/GQA config."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    B = data.draw(st.sampled_from([1, 2]))
+    S = data.draw(st.sampled_from([32, 128]))
+    H = data.draw(st.sampled_from([2, 4]))
+    KV = data.draw(st.sampled_from([1, 2]))
+    if H % KV:
+        KV = 1
+    window = data.draw(st.sampled_from([None, 16]))
+    chunk = data.draw(st.sampled_from([16, 32, 1024]))
+    q = jnp.asarray(rng.normal(size=(B, S, H, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, KV, 16)).astype(np.float32))
+    v = jnp.full((B, S, KV, 16), 3.25, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          kv_chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), 3.25, rtol=1e-4)

@@ -1,0 +1,92 @@
+"""Integration: fault-tolerant training loop + PI-indexed serving."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import data as data_mod
+from repro import optim
+from repro.configs import get_config, smoke
+from repro.launch import serve as serve_mod
+from repro.launch import train as train_mod
+from repro.models import init_train_state
+
+OPT = optim.OptConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+
+
+def tiny_cfg():
+    return smoke(get_config("phi3-mini-3.8b"))
+
+
+def dcfg(cfg):
+    return data_mod.DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=2,
+                               input_mode=cfg.input_mode,
+                               d_model=cfg.d_model)
+
+
+def test_train_loss_decreases(tmp_path):
+    cfg = tiny_cfg()
+    loop = train_mod.TrainLoopConfig(steps=12, ckpt_every=50,
+                                     ckpt_dir=str(tmp_path))
+    res = train_mod.train(cfg, OPT, loop, dcfg(cfg))
+    assert res.final_step == 11
+    assert np.mean(res.losses[-3:]) < np.mean(res.losses[:3])
+
+
+def test_restart_resumes_from_checkpoint(tmp_path):
+    cfg = tiny_cfg()
+    # sync checkpoints: an async save in flight at crash time is correctly
+    # lost (restart would fall back one checkpoint) — fine in production,
+    # nondeterministic in a test
+    loop = train_mod.TrainLoopConfig(steps=10, ckpt_every=3,
+                                     ckpt_dir=str(tmp_path), fail_at_step=7,
+                                     sync_ckpt=True)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train_mod.train(cfg, OPT, loop, dcfg(cfg))
+    # restart: resumes from step 6 checkpoint, not from scratch
+    loop2 = dataclasses.replace(loop, fail_at_step=None)
+    res = train_mod.train(cfg, OPT, loop2, dcfg(cfg))
+    assert res.restored_from == 6
+    assert res.final_step == 9
+
+
+def test_straggler_watchdog(tmp_path):
+    cfg = tiny_cfg()
+    loop = train_mod.TrainLoopConfig(steps=10, ckpt_every=50,
+                                     ckpt_dir=str(tmp_path),
+                                     straggler_factor=2.5)
+    import time
+
+    def pre_step(step):
+        if step == 8:
+            time.sleep(1.0)  # synthetic straggler
+    res = train_mod.train(cfg, OPT, loop, dcfg(cfg),
+                          hooks={"pre_step": pre_step})
+    assert 8 in res.straggler_steps
+
+
+def test_server_end_to_end():
+    cfg = tiny_cfg()
+    params, _ = init_train_state(cfg, OPT, jax.random.key(0))
+    srv = serve_mod.Server(cfg, params, n_slots=4, max_len=32)
+    rng = np.random.default_rng(0)
+    reqs = [serve_mod.Request(rid=100 + i,
+                              prompt=rng.integers(0, cfg.vocab, 5),
+                              max_new=4) for i in range(6)]
+    admitted = srv.admit(reqs[:4])
+    assert admitted == 4
+    done = set()
+    for _ in range(10):
+        done.update(srv.tick())
+        if len(done) == 4:
+            break
+    assert done == {100, 101, 102, 103}
+    for r in reqs[:4]:
+        assert len(r.out) == 4
+        assert all(0 <= t < cfg.vocab for t in r.out)
+    # slots recycled → admit the rest; PI table handled all three op kinds
+    assert srv.admit(reqs[4:]) == 2
+    assert srv.queries_processed > 0
+    # table now holds exactly the two live sessions
+    assert int(srv.table.live_count) == 2
