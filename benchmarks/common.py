@@ -9,6 +9,7 @@ numbers are out of scope by construction.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 import jax
@@ -19,12 +20,35 @@ from repro import data as data_mod
 from repro.core import (PIConfig, build, execute, maybe_rebuild, range_agg)
 
 
+def default_backend() -> str:
+    """Engine backend benchmarks run with unless told otherwise.
+
+    ``PI_BACKEND`` (xla | pallas | pallas-interpret) overrides, so every
+    figure script can be re-run per backend without edits:
+        PI_BACKEND=pallas-interpret python -m benchmarks.run fig7
+    """
+    return os.environ.get("PI_BACKEND", "xla")
+
+
+def bench_backends():
+    """Backends worth timing side by side on this host.
+
+    ``pallas`` (compiled Mosaic) only lowers on a real TPU; interpret mode
+    runs the identical grid computation everywhere.
+    """
+    backends = ["xla", "pallas-interpret"]
+    if jax.default_backend() == "tpu":
+        backends.append("pallas")
+    return backends
+
+
 def make_index(n_keys: int, fanout: int = 8, seed: int = 0,
-               headroom: float = 2.0):
+               headroom: float = 2.0, backend: str | None = None):
     cfg = PIConfig(
         capacity=int(n_keys * headroom),
         pending_capacity=max(8192 * 4, int(0.25 * n_keys)),
-        fanout=fanout)
+        fanout=fanout,
+        backend=backend or default_backend())
     ycfg = data_mod.YCSBConfig(n_keys=n_keys, seed=seed)
     keys, vals = data_mod.ycsb_dataset(ycfg)
     return build(cfg, jnp.asarray(keys), jnp.asarray(vals)), keys, ycfg

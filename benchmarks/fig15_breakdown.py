@@ -14,7 +14,8 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import emit, make_index, run_query_stream
+from benchmarks.common import bench_backends, emit, make_index, \
+    run_query_stream
 
 NUMA_SCRIPT = r"""
 import json, time, numpy as np, jax, jax.numpy as jnp
@@ -67,6 +68,14 @@ def main(n_keys=1 << 16, n_batches=8):
         rows.append(("fig15", "+numa_8shards", round(r["qps"])))
     else:
         rows.append(("fig15", "+numa_8shards", "ERROR"))
+    # 5) engine backends side by side: the same F=8 workload routed through
+    #    each SearchEngine backend (xla descent vs the fused Pallas probe;
+    #    "pallas" joins the ladder on a real TPU, interpret mode validates
+    #    the identical grid computation here)
+    for backend in bench_backends():
+        idx, keys, ycfg = make_index(n_keys, fanout=8, backend=backend)
+        qps, _ = run_query_stream(idx, ycfg, keys, n_batches)
+        rows.append(("fig15", f"engine_{backend}", round(qps)))
     return emit(rows, ("fig", "config", "qps"))
 
 

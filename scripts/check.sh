@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the full pytest suite + a short Pallas-interpret smoke of a
+# real benchmark figure, so the fused probe kernel is exercised end-to-end
+# (build -> execute -> rebuild -> throughput) on every check run.
+#
+#   scripts/check.sh          # suite + smoke
+#   SKIP_SMOKE=1 scripts/check.sh   # suite only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+if [[ -z "${SKIP_SMOKE:-}" ]]; then
+  echo "--- pallas-interpret benchmark smoke (fig7, tiny sizes) ---"
+  PI_BACKEND=pallas-interpret python - <<'EOF'
+import time
+from benchmarks.fig7_batch_size import main
+
+t0 = time.time()
+rows = main(sizes=(1 << 12,), batches=(2048,), total=1 << 12)
+assert rows and all(int(r[-1]) > 0 for r in rows), rows
+print(f"smoke ok in {time.time() - t0:.1f}s: {rows}")
+EOF
+fi
+echo "check.sh: all green"

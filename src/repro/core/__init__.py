@@ -3,15 +3,17 @@
 Public surface:
   PIConfig, PIIndex, build, empty, execute, lookup, traverse, rebuild,
   maybe_rebuild, range_agg, search/insert/delete_batch   (single shard)
+  SearchEngine, get_engine, Probe, BACKENDS, with_backend (descent backends)
   ShardedPIIndex, build_sharded, execute_sharded, make_sharded_executor
   rebalance_from_load / rebalance_from_sample            (NUMA analogue)
   RefIndex                                               (oracle)
 """
 from repro.core.batch import SEARCH, INSERT, DELETE
+from repro.core.engine import BACKENDS, Probe, SearchEngine, get_engine
 from repro.core.index import (
     PIConfig, PIIndex, build, empty, execute, execute_impl, lookup, traverse,
     rebuild, maybe_rebuild, needs_rebuild, range_agg, search_batch,
-    insert_batch, delete_batch,
+    insert_batch, delete_batch, with_backend,
 )
 from repro.core.distributed import (
     ShardedPIIndex, build_sharded, execute_sharded, make_sharded_executor,
@@ -26,7 +28,9 @@ __all__ = [
     "SEARCH", "INSERT", "DELETE", "PIConfig", "PIIndex", "build", "empty",
     "execute", "execute_impl", "lookup", "traverse", "rebuild",
     "maybe_rebuild", "needs_rebuild", "range_agg", "search_batch",
-    "insert_batch", "delete_batch", "ShardedPIIndex", "build_sharded",
+    "insert_batch", "delete_batch", "with_backend",
+    "SearchEngine", "get_engine", "Probe", "BACKENDS",
+    "ShardedPIIndex", "build_sharded",
     "execute_sharded", "make_sharded_executor", "rebuild_sharded",
     "collect_pairs", "dispatch_plan", "scatter_to_buffer",
     "rebalance_from_load", "rebalance_from_sample", "load_imbalance",

@@ -34,6 +34,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import index as pi
 from repro.core.batch import SEARCH
+from repro.sharding import shard_map
 
 NOOP_KEY = None  # padding queries use the key-dtype sentinel (max value)
 
@@ -137,12 +138,13 @@ def build_sharded(cfg: pi.PIConfig, n_shards: int, keys, vals,
 # ---------------------------------------------------------------------------
 
 def _local_execute(shard: pi.PIIndex, fences, ops, qkeys, qvals,
-                   axis_name: str, cap: int):
+                   axis_name: str, cap: int, n_shards: int):
     """Route → execute → route back, from one shard's perspective.
 
-    ``shard`` leaves arrive with a leading (1,) block dim from shard_map.
+    ``shard`` leaves arrive with a leading (1,) block dim from shard_map;
+    ``n_shards`` is the static mesh axis size (buffers are shaped by it).
     """
-    S = jax.lax.axis_size(axis_name)
+    S = n_shards
     kdt = jnp.dtype(shard.keys.dtype)
     sent = pi._sentinel(kdt)
     local = jax.tree.map(lambda x: x[0], shard)
@@ -184,21 +186,34 @@ def _local_execute(shard: pi.PIIndex, fences, ops, qkeys, qvals,
     return new_shard, out_found, out_val, load[None], n_drop[None]
 
 
+# jitted executors are memoized: re-jitting the shard_map body on every
+# batch was the dominant dispatch cost (and defeated XLA's compile cache
+# for the Pallas probe kernel inside pi.execute_impl).
+_EXECUTOR_CACHE: dict = {}
+
+
 def make_sharded_executor(mesh: Mesh, cfg: pi.PIConfig, batch_per_shard: int,
                           axis_name: str = "data",
                           capacity_factor: float = 2.0):
-    """Build the jitted shard_map'd batch executor for a given mesh.
+    """Build (or fetch) the jitted shard_map'd batch executor for a mesh.
 
-    Returns ``fn(state, ops, keys, vals) -> (state', found, vals, load,
-    dropped)`` where ops/keys/vals are global arrays of shape
-    (S * batch_per_shard,) sharded along ``axis_name``.
+    Memoized by ``(mesh, cfg, batch_per_shard, axis_name, capacity_factor)``
+    — note ``cfg`` includes the search backend, so ``xla`` and ``pallas``
+    executors coexist in the cache.  Returns ``fn(state, ops, keys, vals)
+    -> (state', found, vals, load, dropped)`` where ops/keys/vals are
+    global arrays of shape (S * batch_per_shard,) sharded along
+    ``axis_name``.
     """
+    cache_key = (mesh, cfg, batch_per_shard, axis_name, capacity_factor)
+    cached = _EXECUTOR_CACHE.get(cache_key)
+    if cached is not None:
+        return cached
     S = mesh.shape[axis_name]
     cap = int(np.ceil(batch_per_shard / S * capacity_factor))
     spec_state = jax.tree.map(lambda _: P(axis_name), pi.empty(cfg))
     # fences replicated; batch sharded on arrival
-    body = partial(_local_execute, axis_name=axis_name, cap=cap)
-    mapped = jax.shard_map(
+    body = partial(_local_execute, axis_name=axis_name, cap=cap, n_shards=S)
+    mapped = shard_map(
         body, mesh=mesh,
         in_specs=(spec_state, P(), P(axis_name), P(axis_name), P(axis_name)),
         out_specs=(spec_state, P(axis_name), P(axis_name), P(axis_name),
@@ -209,12 +224,13 @@ def make_sharded_executor(mesh: Mesh, cfg: pi.PIConfig, batch_per_shard: int,
     def run(state_shards, fences, ops, qkeys, qvals):
         return mapped(state_shards, fences, ops, qkeys, qvals)
 
+    _EXECUTOR_CACHE[cache_key] = (run, cap)
     return run, cap
 
 
 def execute_sharded(state: ShardedPIIndex, mesh: Mesh, ops, qkeys, qvals,
                     axis_name: str = "data", capacity_factor: float = 2.0):
-    """Convenience one-shot wrapper (builds the executor each call)."""
+    """Convenience one-shot wrapper (executor fetched from the memo cache)."""
     B = ops.shape[0]
     S = state.n_shards
     assert B % S == 0, "global batch must divide the shard count"

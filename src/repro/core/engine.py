@@ -1,0 +1,160 @@
+"""SearchEngine — pluggable batched floor-search over one PI shard.
+
+The paper's entire speedup story is the SIMD BFS descent (Alg. 2).  This
+module makes that descent a *routing decision* instead of an inline loop:
+every traversal consumer (``lookup``, ``execute``, ``range_agg``, the
+sharded executor) asks the engine for positions, and the engine dispatches
+one of three backends (DESIGN.md §3):
+
+================  ==========================================================
+backend           what runs
+================  ==========================================================
+``xla``           plain-jnp descent + ``jnp.searchsorted`` pending probe —
+                  portable baseline, fuses fine under XLA on any device.
+``pallas``        ``kernels.pi_search.pi_probe`` with the real TPU launch
+                  geometry (Mosaic lowering; requires a TPU backend).
+``pallas-interpret``  the same kernel in interpret mode — the exact grid
+                  computation, executable (and CI-testable) on CPU.
+================  ==========================================================
+
+The engine primitive is ``probe``: ONE batched call that returns the
+storage-layer floor position, the pending-buffer insertion point and the
+key-equality match flags for a whole query batch.  Both Pallas backends
+compute all three in a single fused kernel launch; the ``xla`` backend
+computes the identical values with stock jnp ops, so backends are
+bit-identical by construction and testable against ``core.ref.RefIndex``.
+
+Liveness (tombstones, ``pn`` high-water mark) is intentionally *not* the
+engine's business — those are cheap gathers the caller applies on top, and
+keeping them out lets one kernel serve lookups, executes and range scans.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+
+from repro.kernels.pi_search import (FLAG_MAIN_MATCH, FLAG_PENDING_HIT,
+                                     pi_probe, pi_search, sentinel_for)
+
+BACKENDS = ("xla", "pallas", "pallas-interpret")
+
+
+@dataclasses.dataclass(frozen=True)
+class Probe:
+    """Per-query result of the fused floor-search primitive.
+
+    ``pos`` is raw (may be −1 on underflow, or past the live region for
+    sentinel queries); ``ppos`` is clipped to the pending capacity, like
+    the historical ``_pending_lookup``.  ``p_hit`` is a *key* match within
+    the pending array — the caller still intersects with ``ppos < pn``.
+    """
+
+    pos: jnp.ndarray         # (B,) int32 storage floor position, −1 = below
+    main_match: jnp.ndarray  # (B,) bool  storage key at pos equals query
+    ppos: jnp.ndarray        # (B,) int32 clipped pending insertion point
+    p_hit: jnp.ndarray       # (B,) bool  pending key at ppos equals query
+
+
+class SearchEngine:
+    """Backend-selectable descent over index layer + pending buffer."""
+
+    def __init__(self, backend: str = "xla", tile_q: int = 256):
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"unknown search backend {backend!r}; pick one of {BACKENDS}")
+        self.backend = backend
+        self.tile_q = tile_q
+
+    def __repr__(self):
+        return f"SearchEngine(backend={self.backend!r}, tile_q={self.tile_q})"
+
+    @property
+    def uses_pallas(self) -> bool:
+        return self.backend != "xla"
+
+    @property
+    def interpret(self) -> bool:
+        return self.backend == "pallas-interpret"
+
+    # -- primitives --------------------------------------------------------
+
+    def floor(self, index, q: jnp.ndarray) -> jnp.ndarray:
+        """Floor positions: largest i with keys[i] <= q, else −1."""
+        q = q.astype(index.keys.dtype)
+        if self.uses_pallas:
+            return pi_search(index.keys, q, fanout=index.config.fanout,
+                             tile_q=self.tile_q, interpret=self.interpret,
+                             levels=index.levels)
+        pos, underflow = self._descend_xla(index, q)
+        return jnp.where(underflow, jnp.int32(-1), pos)
+
+    def probe(self, index, q: jnp.ndarray) -> Probe:
+        """Fused floor + pending probe for a whole batch (the hot path)."""
+        q = q.astype(index.keys.dtype)
+        if self.uses_pallas:
+            return self._probe_pallas(index, q)
+        return self._probe_xla(index, q)
+
+    # -- xla backend -------------------------------------------------------
+
+    def _descend_xla(self, index, q: jnp.ndarray):
+        """Vectorized Alg. 2 in stock jnp: descend level H→1, at each level
+        compare the F keys of the current entry's child group (one "SIMD
+        compare") and take the rank — the routing-table lookup of Fig. 2
+        done arithmetically."""
+        cfg = index.config
+        F = cfg.fanout
+        sent = sentinel_for(index.keys.dtype)
+
+        # top level: at most F entries -> one compare against the whole level
+        top = index.levels[-1] if cfg.num_levels else index.keys
+        rank = jnp.sum(top[None, :] <= q[:, None], axis=1).astype(jnp.int32) - 1
+        pos = jnp.maximum(rank, 0)
+        underflow = rank < 0
+
+        for lvl in range(cfg.num_levels - 1, -1, -1):
+            arr = index.levels[lvl - 1] if lvl >= 1 else index.keys
+            child = pos[:, None] * F + jnp.arange(F, dtype=jnp.int32)[None, :]
+            ck = jnp.take(arr, child, mode="fill", fill_value=sent)
+            r = jnp.sum(ck <= q[:, None], axis=1).astype(jnp.int32) - 1
+            pos = pos * F + jnp.maximum(r, 0)
+        return pos, underflow
+
+    def _probe_xla(self, index, q: jnp.ndarray) -> Probe:
+        pos, underflow = self._descend_xla(index, q)
+        pos = jnp.where(underflow, jnp.int32(-1), pos)
+        C = index.keys.shape[0]
+        pos_c = jnp.clip(pos, 0, C - 1)
+        main_match = (pos >= 0) & (jnp.take(index.keys, pos_c) == q)
+        PC = index.pkeys.shape[0]
+        ppos = jnp.searchsorted(index.pkeys, q).astype(jnp.int32)
+        ppos_c = jnp.minimum(ppos, PC - 1)
+        p_hit = (index.pkeys[ppos_c] == q) & (ppos < PC)
+        return Probe(pos=pos, main_match=main_match, ppos=ppos_c, p_hit=p_hit)
+
+    # -- pallas backends ---------------------------------------------------
+
+    def _probe_pallas(self, index, q: jnp.ndarray) -> Probe:
+        mpos, ppos, flags = pi_probe(
+            index.keys, index.pkeys, q, fanout=index.config.fanout,
+            tile_q=self.tile_q, interpret=self.interpret,
+            levels=index.levels)
+        PC = index.pkeys.shape[0]
+        return Probe(
+            pos=mpos,
+            main_match=(flags & FLAG_MAIN_MATCH) > 0,
+            ppos=jnp.minimum(ppos, PC - 1),
+            p_hit=(flags & FLAG_PENDING_HIT) > 0,
+        )
+
+
+@functools.lru_cache(maxsize=None)
+def _make_engine(backend: str, tile_q: int) -> SearchEngine:
+    return SearchEngine(backend=backend, tile_q=tile_q)
+
+
+def get_engine(config) -> SearchEngine:
+    """The (memoized) engine a ``PIConfig`` selects via ``config.backend``."""
+    return _make_engine(config.backend, config.tile_q)

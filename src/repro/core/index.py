@@ -34,17 +34,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.batch import SEARCH, INSERT, DELETE, seg_last_write_scan, sort_queries
+from repro.core.engine import BACKENDS, get_engine, sentinel_for
 
 KSENT_I32 = jnp.iinfo(jnp.int32).max  # padding key: sorts after every real key
 
-
-def _sentinel(dtype):
-    """Max-value padding key as a *hashable* numpy scalar (static-arg safe)."""
-    import numpy as np
-    dtype = np.dtype(dtype)
-    if np.issubdtype(dtype, np.integer):
-        return dtype.type(np.iinfo(dtype).max)
-    return dtype.type(np.inf)
+# historical alias (distributed.py and older call sites use pi._sentinel)
+_sentinel = sentinel_for
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +56,12 @@ class PIConfig:
     fanout: int = 4                  # F  — keys per entry == 1/P
     key_dtype: str = "int32"
     rebuild_frac: float = 0.15       # paper: rebuild after 15% of N updates
+    backend: str = "xla"             # search engine: xla|pallas|pallas-interpret
+    tile_q: int = 256                # Pallas query-tile width (grid step)
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
 
     @property
     def num_levels(self) -> int:
@@ -179,59 +180,51 @@ def empty(cfg: PIConfig) -> PIIndex:
 
 
 # ---------------------------------------------------------------------------
-# traversal (the paper's Alg. 2 — index-layer BFS descent)
+# traversal (the paper's Alg. 2 — index-layer BFS descent, via the engine)
 # ---------------------------------------------------------------------------
+
+def with_backend(index: PIIndex, backend: str, tile_q: int | None = None
+                 ) -> PIIndex:
+    """Same index state, different search backend (zero-copy rewrap)."""
+    cfg = dataclasses.replace(
+        index.config, backend=backend,
+        tile_q=index.config.tile_q if tile_q is None else tile_q)
+    return dataclasses.replace(index, config=cfg)
+
 
 def traverse(index: PIIndex, q: jnp.ndarray) -> jnp.ndarray:
     """Floor positions: largest i with keys[i] <= q, else -1.
 
-    Vectorized Alg. 2: descend level H→1, at each level compare the F keys
-    of the current entry's child group (one "SIMD compare") and take the
-    rank — the routing-table lookup of Fig. 2 done arithmetically.  The
-    returned position is the paper's *interception*, which with dense
-    rank-strided levels is already the exact storage-layer floor (no
-    residual walk; the paper walks an expected (1+P)/2P nodes here).
+    The descent itself (vectorized Alg. 2) lives in ``core.engine``; the
+    backend ``index.config.backend`` selects whether the descent runs as
+    stock jnp ops or as the Pallas kernel.  The returned position is the
+    paper's *interception*, which with dense rank-strided levels is already
+    the exact storage-layer floor (no residual walk; the paper walks an
+    expected (1+P)/2P nodes here).
     """
-    cfg = index.config
-    F = cfg.fanout
-    sent = _sentinel(index.keys.dtype)
-    q = q.astype(index.keys.dtype)
-
-    # top level: at most F entries -> one vector compare against the whole level
-    top = index.levels[-1] if cfg.num_levels else index.keys
-    rank = jnp.sum(top[None, :] <= q[:, None], axis=1).astype(jnp.int32) - 1
-    pos = jnp.maximum(rank, 0)
-    underflow = rank < 0
-
-    for lvl in range(cfg.num_levels - 1, -1, -1):
-        arr = index.levels[lvl - 1] if lvl >= 1 else index.keys
-        child = pos[:, None] * F + jnp.arange(F, dtype=jnp.int32)[None, :]
-        ck = jnp.take(arr, child, mode="fill", fill_value=sent)
-        r = jnp.sum(ck <= q[:, None], axis=1).astype(jnp.int32) - 1
-        pos = pos * F + jnp.maximum(r, 0)
-
-    return jnp.where(underflow, jnp.int32(-1), pos)
+    return get_engine(index.config).floor(index, q)
 
 
-def _pending_lookup(index: PIIndex, q: jnp.ndarray):
-    """Binary search of the sorted pending buffer (the 'storage walk' half)."""
-    pc = index.pkeys.shape[0]
-    ppos = jnp.searchsorted(index.pkeys, q.astype(index.pkeys.dtype))
-    ppos_c = jnp.minimum(ppos, pc - 1)
-    hit = (index.pkeys[ppos_c] == q.astype(index.pkeys.dtype)) & (ppos < pc)
-    live = hit & ~index.ptomb[ppos_c] & (ppos_c < index.pn)
-    return ppos_c, hit & (ppos_c < index.pn), live
+def _probe(index: PIIndex, q: jnp.ndarray):
+    """Engine probe + the liveness gathers the engine leaves to us.
+
+    Returns (pos, main_match, main_live, main_val, ppos, p_match, p_live):
+    the per-query pre-batch view of both layers, identical across backends.
+    """
+    pr = get_engine(index.config).probe(index, q)
+    pos_c = jnp.maximum(pr.pos, 0)
+    main_live = pr.main_match & ~jnp.take(index.tomb, pos_c)
+    main_val = jnp.take(index.vals, pos_c)
+    p_match = pr.p_hit & (pr.ppos < index.pn)
+    p_live = p_match & ~jnp.take(index.ptomb, pr.ppos)
+    return pr.pos, pr.main_match, main_live, main_val, pr.ppos, p_match, \
+        p_live
 
 
 def lookup(index: PIIndex, q: jnp.ndarray):
     """Batched point lookup → (found, val).  found=False is the paper's null."""
-    pos = traverse(index, q)
-    pos_c = jnp.maximum(pos, 0)
-    main_match = (pos >= 0) & (jnp.take(index.keys, pos_c) ==
-                               q.astype(index.keys.dtype))
-    main_live = main_match & ~jnp.take(index.tomb, pos_c)
-    main_val = jnp.take(index.vals, pos_c)
-    ppos, _, p_live = _pending_lookup(index, q)
+    _, _, main_live, main_val, ppos, _, p_live = _probe(
+        index, q.astype(index.keys.dtype))
     p_val = jnp.take(index.pvals, ppos)
     found = main_live | p_live
     val = jnp.where(p_live, p_val, main_val)
@@ -267,13 +260,10 @@ def execute_impl(index: PIIndex, ops: jnp.ndarray, qkeys: jnp.ndarray,
     (inc_has, inc_val, inc_tomb), (exc_has, exc_val, exc_tomb) = (
         seg_last_write_scan(newseg, is_write, s_vals, is_del))
 
-    # --- store state per query (pre-batch view) ---------------------------
-    pos = traverse(index, s_keys)
+    # --- store state per query (pre-batch view, one fused engine probe) ---
+    pos, main_match, main_live, main_val, ppos, p_match, p_live = _probe(
+        index, s_keys)
     pos_c = jnp.maximum(pos, 0)
-    main_match = (pos >= 0) & (jnp.take(index.keys, pos_c) == s_keys)
-    main_live = main_match & ~jnp.take(index.tomb, pos_c)
-    main_val = jnp.take(index.vals, pos_c)
-    ppos, p_match, p_live = _pending_lookup(index, s_keys)
     store_found = main_live | p_live
     store_val = jnp.where(p_live, jnp.take(index.pvals, ppos), main_val)
 

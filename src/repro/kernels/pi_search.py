@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: batched PI index-layer descent (the paper's Alg. 2).
+"""Pallas TPU kernels: batched PI index-layer descent (the paper's Alg. 2).
 
 The paper's hot spot is the SIMD entry compare: load M contiguous keys of an
 entry into a SIMD register, compare against the query key, route by the mask
@@ -12,19 +12,31 @@ entry into a SIMD register, compare against the query key, route by the mask
   the grid: each grid step owns a TILE_Q-query block, and BlockSpec streams
   the level arrays HBM→VMEM once per block, double-buffered by Pallas.
 
+Two entry points (see DESIGN.md §3):
+
+* ``pi_search``  — floor positions over the storage layer only (the original
+  Alg. 2 descent).  Used by the kernel test sweeps and as the engine's
+  ``floor`` primitive.
+* ``pi_probe``   — the production hot path: ONE launch fuses the descent
+  with the pending-buffer binary search and returns (main-pos, pending-pos,
+  match flags).  This is what ``core.engine.SearchEngine`` dispatches for
+  the ``pallas`` / ``pallas-interpret`` backends, so every lookup/execute/
+  range query goes through this kernel when a Pallas backend is selected.
+
 VMEM budget: the index layer holds ~C/(F−1) keys, so with C = 2²⁰ int32
 keys and F = 8 the whole index layer is ~600 KB — it fits VMEM outright,
 which is the TPU analogue of the paper's "pin the high levels in cache"
 future-work optimization (§7).  For larger C the top levels stay VMEM-
-resident and only the bottom level streams.
+resident and only the bottom level streams.  The pending buffer (PC keys,
+power-of-two padded) rides in the same launch as one more broadcast block.
 
-The kernel is validated in interpret mode on CPU (this container has no
+The kernels are validated in interpret mode on CPU (this container has no
 TPU); the BlockSpec tiling below is the real TPU launch geometry.
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,38 +44,125 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 
-def _descend_kernel(*refs, num_levels: int, fanout: int, sentinel):
+def sentinel_for(dtype):
+    """Max-value padding key as a *hashable* numpy scalar (static-arg safe)."""
+    dtype = np.dtype(dtype)
+    if np.issubdtype(dtype, np.integer):
+        return dtype.type(np.iinfo(dtype).max)
+    return dtype.type(np.inf)
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _descend(levels, storage, q, *, num_levels: int, fanout: int):
+    """Alg. 2 descent for one query tile → (pos, underflow).
+
+    ``levels`` is top-first ([level H, ..., level 1]); all arrays are
+    pre-padded so every child group of F keys is in bounds (pad_levels)
+    — gathers need no bounds handling.
+    """
+    i32 = jnp.int32
+    top = levels[0] if num_levels else storage
+    # top level: ≤ F entries — one broadcast compare ("SIMD" over the tile)
+    rank = jnp.sum(top[None, :] <= q[:, None], axis=1).astype(i32) - 1
+    underflow = rank < 0
+    pos = jnp.maximum(rank, 0)
+    if num_levels:
+        # descend: one compare of the F-key child entry per level
+        arrs = [levels[i] for i in range(1, num_levels)] + [storage]
+        for arr in arrs:
+            child = pos[:, None] * fanout + \
+                jnp.arange(fanout, dtype=i32)[None, :]
+            ck = jnp.take(arr, child.reshape(-1),
+                          mode="clip").reshape(child.shape)
+            r = jnp.sum(ck <= q[:, None], axis=1).astype(i32) - 1
+            pos = pos * fanout + jnp.maximum(r, 0)
+    return pos, underflow
+
+
+def _lower_bound(sorted_keys, q):
+    """Branchless binary search: #{i : sorted_keys[i] < q} per query lane.
+
+    ``sorted_keys`` must be power-of-two sized (sentinel-padded); the loop
+    is the classic meta binary search — log2(n) gathers of one (TILE_Q,)
+    vector each, no data-dependent control flow, so it vectorizes on the
+    VPU exactly like the descent.
+    """
+    n = sorted_keys.shape[0]
+    count = jnp.zeros(q.shape, jnp.int32)
+    step = n >> 1
+    while step:
+        cand = count + step
+        ck = jnp.take(sorted_keys, cand - 1, mode="clip")
+        count = jnp.where(ck < q, cand, count)
+        step >>= 1
+    # count ≤ n−1 here (steps sum to n−1); one final compare reaches n
+    last = jnp.take(sorted_keys, count, mode="clip")
+    return count + (last < q).astype(jnp.int32)
+
+
+def _descend_kernel(*refs, num_levels: int, fanout: int):
     """One grid step: full descent for one query tile.
 
     refs = (top_level, ..., level1, storage, queries_tile, out_tile)
-    Level arrays are pre-padded so every child group of F keys is in
-    bounds (ops.pad_levels) — gathers need no bounds handling.
     """
     *level_refs, storage_ref, q_ref, out_ref = refs
     q = q_ref[...]
-    f32 = jnp.int32
-
-    # top level: ≤ F entries — one broadcast compare ("SIMD" over the tile)
-    top = level_refs[0][...] if num_levels else storage_ref[...]
-    rank = jnp.sum(top[None, :] <= q[:, None], axis=1).astype(f32) - 1
-    underflow = rank < 0
-    pos = jnp.maximum(rank, 0)
-
-    # descend: one compare of the F-key child entry per level (Alg. 2 loop)
-    arrs = [level_refs[i][...] for i in range(1, num_levels)] + [
-        storage_ref[...]]
-    for arr in arrs:
-        child = pos[:, None] * fanout + \
-            jnp.arange(fanout, dtype=f32)[None, :]
-        ck = jnp.take(arr, child.reshape(-1), mode="clip").reshape(child.shape)
-        r = jnp.sum(ck <= q[:, None], axis=1).astype(f32) - 1
-        pos = pos * fanout + jnp.maximum(r, 0)
-
+    levels = [ref[...] for ref in level_refs]
+    pos, underflow = _descend(levels, storage_ref[...], q,
+                              num_levels=num_levels, fanout=fanout)
     out_ref[...] = jnp.where(underflow, jnp.int32(-1), pos)
 
 
+FLAG_MAIN_MATCH = 1    # storage key at the floor position equals the query
+FLAG_PENDING_HIT = 2   # pending key at the insertion point equals the query
+
+
+def _probe_kernel(*refs, num_levels: int, fanout: int, capacity: int,
+                  pending_capacity: int):
+    """One grid step of the fused hot path: descent + pending binary search.
+
+    refs = (top, ..., level1, storage, pending, queries_tile,
+            mpos_tile, ppos_tile, flags_tile)
+    Matching the jnp reference semantics exactly (bit-identical):
+      mpos  = floor position in storage, −1 when q < storage[0]
+      ppos  = searchsorted(pending, q) — the *unclipped* insertion point
+      flags = FLAG_MAIN_MATCH | FLAG_PENDING_HIT bitmask; equality is
+              evaluated at positions clipped to the true (unpadded)
+              capacities, as the XLA path does.
+    """
+    *level_refs, storage_ref, pending_ref, q_ref, \
+        mpos_ref, ppos_ref, flags_ref = refs
+    q = q_ref[...]
+    levels = [ref[...] for ref in level_refs]
+    storage = storage_ref[...]
+
+    pos, underflow = _descend(levels, storage, q,
+                              num_levels=num_levels, fanout=fanout)
+    mpos = jnp.where(underflow, jnp.int32(-1), pos)
+    mpos_c = jnp.clip(mpos, 0, capacity - 1)
+    main_match = (mpos >= 0) & (jnp.take(storage, mpos_c, mode="clip") == q)
+
+    pending = pending_ref[...]
+    ppos = _lower_bound(pending, q)
+    ppos_c = jnp.minimum(ppos, pending_capacity - 1)
+    p_hit = (jnp.take(pending, ppos_c, mode="clip") == q) & \
+        (ppos < pending_capacity)
+
+    mpos_ref[...] = mpos
+    ppos_ref[...] = ppos
+    flags_ref[...] = main_match.astype(jnp.int32) * FLAG_MAIN_MATCH | \
+        p_hit.astype(jnp.int32) * FLAG_PENDING_HIT
+
+
+# ---------------------------------------------------------------------------
+# host-side geometry
+# ---------------------------------------------------------------------------
+
 def pad_levels(storage: jnp.ndarray, fanout: int,
-               sentinel) -> Sequence[jnp.ndarray]:
+               sentinel) -> Tuple[Sequence[jnp.ndarray], jnp.ndarray]:
     """Derive + pad the index-layer levels so child groups are in bounds.
 
     Level l holds every fanout**l-th storage key.  Each level is padded to
@@ -101,44 +200,158 @@ def pad_levels(storage: jnp.ndarray, fanout: int,
     return padded, storage
 
 
+def pad_index_levels(levels: Sequence[jnp.ndarray], storage: jnp.ndarray,
+                     fanout: int, sentinel):
+    """Kernel geometry from *precomputed* levels (``PIIndex.levels``).
+
+    Same output as ``pad_levels`` — [top, ..., level1] padded so child
+    groups stay in bounds, plus padded storage — but reuses the level
+    arrays the index already maintains (built once per rebuild) instead of
+    re-gathering them from storage on every probe.  ``levels`` is
+    bottom-up (level 1 first), as stored on ``PIIndex``.
+    """
+    tops = list(levels[::-1])  # top ... level1
+    padded = []
+    for i, lv in enumerate(tops):
+        parent = tops[i - 1] if i > 0 else None
+        want = lv.shape[0] if parent is None else parent.shape[0] * fanout
+        if want > lv.shape[0]:
+            lv = jnp.concatenate(
+                [lv, jnp.full((want - lv.shape[0],), sentinel, lv.dtype)])
+        padded.append(lv)
+    want = (padded[-1].shape[0] if padded else 1) * fanout
+    if want > storage.shape[0]:
+        storage = jnp.concatenate(
+            [storage,
+             jnp.full((want - storage.shape[0],), sentinel, storage.dtype)])
+    return padded, storage
+
+
+def _pad_queries(queries: jnp.ndarray, tile_q: int, sentinel):
+    """Pad the batch to a tile_q multiple with sentinel queries.
+
+    Sentinel queries descend to the array tail and are sliced off by the
+    caller — padding here (instead of asserting on the caller) lets every
+    batch size through the kernel unchanged.
+    """
+    B = queries.shape[0]
+    pad = -B % tile_q
+    if pad:
+        queries = jnp.concatenate(
+            [queries, jnp.full((pad,), sentinel, queries.dtype)])
+    return queries, B
+
+
+def _broadcast_spec(arr):
+    """This block is identical for every grid step (index_map → block 0)."""
+    return pl.BlockSpec(arr.shape, lambda i: (0,))
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
 def pi_search(storage: jnp.ndarray, queries: jnp.ndarray, *, fanout: int = 8,
-              tile_q: int = 256, interpret: bool = False) -> jnp.ndarray:
+              tile_q: int = 256, interpret: bool = False,
+              levels: Sequence[jnp.ndarray] | None = None) -> jnp.ndarray:
     """Batched floor search over a sorted sentinel-padded key array.
 
     Args:
       storage: (C,) sorted keys, padded with the dtype max sentinel.
-      queries: (B,) query keys; B must be a multiple of tile_q (pad with
-               sentinel queries if needed — they return C-1 harmlessly).
+      queries: (B,) query keys; any B — ragged batches are sentinel-padded
+               to a tile_q multiple internally and sliced back.
+      levels:  optional precomputed index-layer arrays (bottom-up, as on
+               ``PIIndex.levels``); derived from storage when absent.
     Returns:
       (B,) int32 positions (−1 where q < storage[0]).
     """
-    if np.issubdtype(np.dtype(storage.dtype), np.integer):
-        sentinel = np.dtype(storage.dtype).type(
-            np.iinfo(np.dtype(storage.dtype)).max)
+    sentinel = sentinel_for(storage.dtype)
+    if levels is None:
+        levels, storage_p = pad_levels(storage, fanout, sentinel)
     else:
-        sentinel = np.dtype(storage.dtype).type(np.inf)
-    levels, storage_p = pad_levels(storage, fanout, sentinel)
-    B = queries.shape[0]
-    assert B % tile_q == 0, (B, tile_q)
-    grid = (B // tile_q,)
+        levels, storage_p = pad_index_levels(levels, storage, fanout,
+                                             sentinel)
+    queries_p, B = _pad_queries(queries.astype(storage.dtype), tile_q,
+                                sentinel)
+    grid = (queries_p.shape[0] // tile_q,)
     num_levels = len(levels)
 
-    # levels + storage are broadcast to every grid step (index_map → block 0);
-    # the query tile and output walk the grid.
-    level_specs = [pl.BlockSpec(lv.shape, lambda i: (0,)) for lv in levels]
-    in_specs = level_specs + [
-        pl.BlockSpec(storage_p.shape, lambda i: (0,)),
+    # levels + storage are broadcast to every grid step; the query tile and
+    # output walk the grid.
+    in_specs = [_broadcast_spec(lv) for lv in levels] + [
+        _broadcast_spec(storage_p),
         pl.BlockSpec((tile_q,), lambda i: (i,)),
     ]
     out_spec = pl.BlockSpec((tile_q,), lambda i: (i,))
 
     kernel = functools.partial(_descend_kernel, num_levels=num_levels,
-                               fanout=fanout, sentinel=sentinel)
-    return pl.pallas_call(
+                               fanout=fanout)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((queries_p.shape[0],), jnp.int32),
         interpret=interpret,
-    )(*levels, storage_p, queries.astype(storage.dtype))
+    )(*levels, storage_p, queries_p)
+    return out[:B]
+
+
+def pi_probe(storage: jnp.ndarray, pending: jnp.ndarray,
+             queries: jnp.ndarray, *, fanout: int = 8, tile_q: int = 256,
+             interpret: bool = False,
+             levels: Sequence[jnp.ndarray] | None = None):
+    """Fused production probe: descent + pending binary search, ONE launch.
+
+    Args:
+      storage: (C,)  sorted storage-layer keys, sentinel-padded.
+      pending: (PC,) sorted pending-buffer keys, sentinel-padded.
+      queries: (B,)  query keys; any B (tile-padded internally).
+      levels:  optional precomputed index-layer arrays (bottom-up, as on
+               ``PIIndex.levels``); derived from storage when absent.
+    Returns:
+      (mpos, ppos, flags) int32 triplet per query:
+        mpos  — storage floor position (−1 underflow),
+        ppos  — unclipped insertion point into the pending buffer
+                (== jnp.searchsorted(pending, q)),
+        flags — FLAG_MAIN_MATCH / FLAG_PENDING_HIT bitmask.
+    """
+    sentinel = sentinel_for(storage.dtype)
+    C = storage.shape[0]
+    PC = pending.shape[0]
+    if levels is None:
+        levels, storage_p = pad_levels(storage, fanout, sentinel)
+    else:
+        levels, storage_p = pad_index_levels(levels, storage, fanout,
+                                             sentinel)
+    # pending padded to a power of two for the branchless binary search
+    P2 = 1 << max(0, (PC - 1).bit_length())
+    if P2 > PC:
+        pending = jnp.concatenate(
+            [pending, jnp.full((P2 - PC,), sentinel, pending.dtype)])
+    queries_p, B = _pad_queries(queries.astype(storage.dtype), tile_q,
+                                sentinel)
+    Bp = queries_p.shape[0]
+    grid = (Bp // tile_q,)
+    num_levels = len(levels)
+
+    in_specs = [_broadcast_spec(lv) for lv in levels] + [
+        _broadcast_spec(storage_p),
+        _broadcast_spec(pending),
+        pl.BlockSpec((tile_q,), lambda i: (i,)),
+    ]
+    tile_spec = pl.BlockSpec((tile_q,), lambda i: (i,))
+
+    kernel = functools.partial(_probe_kernel, num_levels=num_levels,
+                               fanout=fanout, capacity=C,
+                               pending_capacity=PC)
+    mpos, ppos, flags = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(tile_spec, tile_spec, tile_spec),
+        out_shape=tuple(jax.ShapeDtypeStruct((Bp,), jnp.int32)
+                        for _ in range(3)),
+        interpret=interpret,
+    )(*levels, storage_p, pending, queries_p)
+    return mpos[:B], ppos[:B], flags[:B]

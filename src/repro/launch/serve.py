@@ -38,14 +38,19 @@ class Server:
     """Continuous batching with a fixed pool of cache slots."""
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 8,
-                 max_len: int = 64):
+                 max_len: int = 64, index_backend: str = "xla"):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
-        # PI session table: key = request id, value = slot
+        # PI session table: key = request id, value = slot.  index_backend
+        # selects the descent engine (core.engine) — "pallas" on TPU pods,
+        # "xla" on CPU dev boxes; tile_q is shrunk to the table scale so a
+        # scheduler tick stays a single-tile launch.
         self.table = build(PIConfig(capacity=4 * n_slots,
-                                    pending_capacity=2 * n_slots, fanout=4),
+                                    pending_capacity=2 * n_slots, fanout=4,
+                                    backend=index_backend,
+                                    tile_q=min(256, 4 * n_slots)),
                            jnp.zeros((0,), jnp.int32),
                            jnp.zeros((0,), jnp.int32))
         self.free = list(range(n_slots))

@@ -185,5 +185,5 @@ def compressed_psum(x, axis_name: str, err):
     deq = q.astype(jnp.float32) * scale
     new_err = xf - deq
     summed = jax.lax.psum(deq, axis_name)
-    n = jax.lax.axis_size(axis_name)
-    return summed / n, new_err
+    from repro.sharding import axis_size
+    return summed / axis_size(axis_name), new_err

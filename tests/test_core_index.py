@@ -1,8 +1,17 @@
-"""PIIndex vs the RefIndex oracle: unit + hypothesis property tests."""
+"""PIIndex vs the RefIndex oracle: unit + hypothesis property tests.
+
+The unit tests run everywhere; the hypothesis property test at the bottom
+skips cleanly when hypothesis is absent (requirements-dev.txt pins it).
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # dev extra — only the property test needs it
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (
     DELETE, INSERT, SEARCH, PIConfig, RefIndex, build, delete_batch, execute,
@@ -146,22 +155,26 @@ def test_search_insert_delete_wrappers(rng):
 # property-based: arbitrary op sequences match the oracle
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=40, deadline=None)
-@given(data=st.data())
-def test_property_oracle_equivalence(data):
-    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
-    n0 = data.draw(st.integers(0, 60))
-    keyspace = data.draw(st.sampled_from([50, 500, 100_000]))
-    keys = rng.choice(keyspace, size=min(n0, keyspace), replace=False) \
-        .astype(np.int32)
-    vals = np.arange(len(keys), dtype=np.int32)
-    idx = build(CFG, jnp.asarray(keys), jnp.asarray(vals))
-    ref = RefIndex.build(keys, vals)
-    for _ in range(data.draw(st.integers(1, 3))):
-        B = data.draw(st.sampled_from([4, 16, 64]))
-        ops = rng.integers(0, 3, B).astype(np.int32)
-        ks = rng.integers(0, keyspace, B).astype(np.int32)
-        vs = rng.integers(0, 100, B).astype(np.int32)
-        idx = check_batch(idx, ref, ops, ks, vs)
-        if bool(needs_rebuild(idx)):
-            idx = rebuild(idx)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(data=st.data())
+    def test_property_oracle_equivalence(data):
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+        n0 = data.draw(st.integers(0, 60))
+        keyspace = data.draw(st.sampled_from([50, 500, 100_000]))
+        keys = rng.choice(keyspace, size=min(n0, keyspace), replace=False) \
+            .astype(np.int32)
+        vals = np.arange(len(keys), dtype=np.int32)
+        idx = build(CFG, jnp.asarray(keys), jnp.asarray(vals))
+        ref = RefIndex.build(keys, vals)
+        for _ in range(data.draw(st.integers(1, 3))):
+            B = data.draw(st.sampled_from([4, 16, 64]))
+            ops = rng.integers(0, 3, B).astype(np.int32)
+            ks = rng.integers(0, keyspace, B).astype(np.int32)
+            vs = rng.integers(0, 100, B).astype(np.int32)
+            idx = check_batch(idx, ref, ops, ks, vs)
+            if bool(needs_rebuild(idx)):
+                idx = rebuild(idx)
+else:
+    def test_property_oracle_equivalence():
+        pytest.importorskip("hypothesis")

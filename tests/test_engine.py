@@ -1,0 +1,172 @@
+"""SearchEngine backend parity: xla vs pallas-interpret vs RefIndex floor.
+
+Property-style sweeps (plain rng, no hypothesis dependency) covering the
+satellite matrix: fanouts {4, 8, 16}, empty index, all-sentinel padding,
+duplicate queries, and queries below the minimum key.  The bar is
+*bit-identical* positions and flags across backends, and agreement with
+``core.ref.RefIndex`` floor semantics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DELETE, INSERT, SEARCH, PIConfig, RefIndex, build, execute_impl,
+    get_engine, insert_batch, lookup, traverse, with_backend,
+)
+
+KSENT = np.iinfo(np.int32).max
+FANOUTS = (4, 8, 16)
+BACKENDS = ("xla", "pallas-interpret")
+
+
+def mk_cfg(fanout, backend, capacity=512, pending=96):
+    return PIConfig(capacity=capacity, pending_capacity=pending,
+                    fanout=fanout, backend=backend, tile_q=64)
+
+
+def mk_index(rng, fanout, backend, n=150, key_space=10_000, **kw):
+    keys = rng.choice(key_space, size=n, replace=False).astype(np.int32)
+    vals = np.arange(n, dtype=np.int32)
+    idx = build(mk_cfg(fanout, backend, **kw), jnp.asarray(keys),
+                jnp.asarray(vals))
+    return idx, RefIndex.build(keys, vals), keys
+
+
+def mixed_queries(rng, keys, n_extra=64):
+    """Stored keys, duplicates, misses, below-min and sentinel queries."""
+    return np.concatenate([
+        keys[:16], keys[:16],                                 # duplicates
+        rng.integers(0, 11_000, n_extra).astype(np.int32),    # mixed hits
+        np.array([keys.min() - 1, -5, np.iinfo(np.int32).min,
+                  KSENT - 1], np.int32),                      # below min/high
+    ])
+
+
+@pytest.mark.parametrize("fanout", FANOUTS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_floor_matches_ref_semantics(rng, fanout, backend):
+    """Engine floor == RefIndex.floor (and searchsorted) for every backend."""
+    idx, ref, keys = mk_index(rng, fanout, backend)
+    q = mixed_queries(rng, keys)
+    pos = np.asarray(traverse(idx, jnp.asarray(q)))
+    sk = np.sort(keys)
+    want = np.searchsorted(sk, q, side="right") - 1
+    assert np.array_equal(pos, want)
+    for qi, pi_ in zip(q, pos):
+        fl = ref.floor(qi)
+        if fl is None:
+            assert pi_ == -1
+        else:
+            assert sk[pi_] == fl
+
+
+@pytest.mark.parametrize("fanout", FANOUTS)
+def test_probe_bit_identical_across_backends(rng, fanout):
+    """Full Probe structs (pos, match flags, pending pos) agree bitwise,
+    including a populated pending buffer."""
+    idx_x, _, keys = mk_index(rng, fanout, "xla")
+    # grow the pending buffer so the fused kernel's binary search is live
+    newk = (50_000 + np.arange(40) * 7).astype(np.int32)
+    idx_x, _ = insert_batch(idx_x, jnp.asarray(newk),
+                            jnp.asarray(np.arange(40, dtype=np.int32)))
+    idx_p = with_backend(idx_x, "pallas-interpret")
+    q = jnp.asarray(np.concatenate([mixed_queries(rng, keys), newk[:10],
+                                    np.array([KSENT], np.int32)]))
+    pr_x = get_engine(idx_x.config).probe(idx_x, q)
+    pr_p = get_engine(idx_p.config).probe(idx_p, q)
+    for field in ("pos", "main_match", "ppos", "p_hit"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(pr_x, field)), np.asarray(getattr(pr_p, field)),
+            err_msg=f"Probe.{field} diverged at fanout={fanout}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_empty_index(rng, backend):
+    """All-sentinel storage: every sub-sentinel query underflows to -1."""
+    idx = build(mk_cfg(8, backend), jnp.zeros((0,), jnp.int32),
+                jnp.zeros((0,), jnp.int32))
+    q = np.array([-100, 0, 1, 12345, KSENT - 1], np.int32)
+    pos = np.asarray(traverse(idx, jnp.asarray(q)))
+    assert np.all(pos == -1)
+    found, val = lookup(idx, jnp.asarray(q))
+    assert not np.any(np.asarray(found))
+
+
+@pytest.mark.parametrize("fanout", FANOUTS)
+def test_all_sentinel_padding_region(rng, fanout):
+    """A nearly-empty index (huge sentinel tail) agrees across backends."""
+    keys = np.array([10, 20, 30], np.int32)
+    q = np.array([5, 10, 15, 25, 30, 31, 9_999], np.int32)
+    got = {}
+    for backend in BACKENDS:
+        idx = build(mk_cfg(fanout, backend, capacity=1024),
+                    jnp.asarray(keys),
+                    jnp.asarray(np.arange(3, dtype=np.int32)))
+        got[backend] = np.asarray(traverse(idx, jnp.asarray(q)))
+    np.testing.assert_array_equal(got["xla"], got["pallas-interpret"])
+    np.testing.assert_array_equal(
+        got["xla"], np.searchsorted(keys, q, side="right") - 1)
+
+
+@pytest.mark.parametrize("fanout", FANOUTS)
+def test_execute_bit_identical_across_backends(rng, fanout):
+    """Same mixed op stream through both backends → identical results AND
+    identical post-batch index state (every array leaf)."""
+    idx_x, ref, keys = mk_index(rng, fanout, "xla")
+    idx_p = with_backend(idx_x, "pallas-interpret")
+    for step in range(4):
+        B = 64
+        ops = rng.integers(0, 3, B).astype(np.int32)
+        ks = rng.choice(np.concatenate(
+            [keys, rng.integers(0, 10_000, 50).astype(np.int32)]),
+            size=B).astype(np.int32)
+        vs = rng.integers(0, 1000, B).astype(np.int32)
+        args = (jnp.asarray(ops), jnp.asarray(ks), jnp.asarray(vs))
+        idx_x, (fx, vx) = execute_impl(idx_x, *args)
+        idx_p, (fp, vp) = execute_impl(idx_p, *args)
+        np.testing.assert_array_equal(np.asarray(fx), np.asarray(fp))
+        np.testing.assert_array_equal(np.asarray(vx), np.asarray(vp))
+        for lx, lp in zip(jax.tree.leaves(idx_x), jax.tree.leaves(idx_p)):
+            np.testing.assert_array_equal(np.asarray(lx), np.asarray(lp))
+        # and both still agree with the oracle
+        expected = ref.execute(ops, ks, vs)
+        got = [int(vx[i]) if bool(fx[i]) else None for i in range(B)]
+        assert got == expected
+
+
+def test_lookup_through_pending_parity(rng):
+    """Lookups that must be answered from the pending buffer match across
+    backends and the oracle after inserts (pre-rebuild)."""
+    idx, ref, keys = mk_index(rng, 8, "xla", n=60)
+    newk = rng.choice(5_000, 32, replace=False).astype(np.int32) + 20_000
+    newv = np.arange(32, dtype=np.int32)
+    idx, _ = insert_batch(idx, jnp.asarray(newk), jnp.asarray(newv))
+    for k, v in zip(newk, newv):
+        ref.data[int(k)] = int(v)
+    q = np.concatenate([newk, keys[:10], newk + 1])
+    for backend in BACKENDS:
+        f, v = lookup(with_backend(idx, backend), jnp.asarray(q))
+        for i, k in enumerate(q):
+            r = ref.search(k)
+            assert bool(f[i]) == (r is not None), (backend, k)
+            if r is not None:
+                assert int(v[i]) == r
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_ragged_batches_tile_padded(rng, backend):
+    """Batch sizes that don't divide tile_q go through the kernel padding."""
+    idx, ref, keys = mk_index(rng, 8, backend)
+    for B in (1, 7, 63, 65, 200):
+        q = rng.choice(keys, size=B).astype(np.int32)
+        f, v = lookup(idx, jnp.asarray(q))
+        assert np.asarray(f).shape == (B,)
+        for i, k in enumerate(q):
+            assert bool(f[i]) and int(v[i]) == ref.search(k)
+
+
+def test_bad_backend_rejected():
+    with pytest.raises(ValueError):
+        PIConfig(backend="simd")

@@ -80,7 +80,9 @@ from repro import optim
 mesh = jax.make_mesh((8,), ("pod",))
 from jax.sharding import PartitionSpec as P
 
-@partial(jax.shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")),
+from repro.sharding import shard_map
+
+@partial(shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")),
          out_specs=(P("pod"), P("pod")), check_vma=False)
 def step(x, err):
     y, e = optim.compressed_psum(x[0], "pod", err[0])
