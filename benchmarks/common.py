@@ -9,6 +9,7 @@ numbers are out of scope by construction.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import time
 
@@ -77,8 +78,33 @@ def run_query_stream(idx, ycfg, keys, n_batches: int, warmup: int = 2):
     return qps, idx
 
 
-def emit(rows, header):
+def emit(rows, header, fig=None, config=None):
+    """Print the CSV block and write ``BENCH_<fig>.json`` next to it.
+
+    The JSON side channel is what populates the perf trajectory across
+    PRs: rows + header verbatim, plus the engine backend and whatever
+    scenario config the figure wants recorded.  ``fig`` defaults to the
+    first column of the first row (every figure script tags rows that
+    way); ``BENCH_DIR`` overrides the output directory (default: cwd).
+    """
     print(",".join(header))
     for r in rows:
         print(",".join(str(x) for x in r))
+    if fig is None and rows:
+        fig = str(rows[0][0])
+    if fig:
+        payload = {
+            "fig": fig,
+            "backend": default_backend(),
+            "jax_backend": jax.default_backend(),
+            "timestamp": time.time(),
+            "header": list(header),
+            "rows": [list(r) for r in rows],
+            "config": config or {},
+        }
+        path = os.path.join(os.environ.get("BENCH_DIR", "."),
+                            f"BENCH_{fig}.json")
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print(f"[emit] wrote {path}")
     return rows

@@ -8,8 +8,11 @@ import time
 
 from benchmarks import (fig6_dataset_size, fig7_batch_size, fig8_scalability,
                         fig9_mixed, fig10_skew, fig14_range, fig15_breakdown,
-                        model_check)
+                        fig_pipeline, model_check)
 
+# every figure's emit() also writes a machine-readable BENCH_<fig>.json
+# (rows + backend + scenario config) into BENCH_DIR (default: cwd) — that
+# file is the per-PR perf trajectory record
 ALL = {
     "fig6": fig6_dataset_size.main,
     "fig7": fig7_batch_size.main,
@@ -18,6 +21,7 @@ ALL = {
     "fig10": fig10_skew.main,
     "fig14": fig14_range.main,
     "fig15": fig15_breakdown.main,
+    "pipeline": fig_pipeline.main,
     "model": model_check.main,
 }
 

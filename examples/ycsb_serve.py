@@ -39,6 +39,11 @@ def main():
             raise RuntimeError("server did not drain")
     print(f"served {len(done)} requests in {tick} ticks; "
           f"PI session-table processed {srv.queries_processed} index queries")
+    s = srv.pipeline_metrics.summary()
+    print(f"pipeline: {s['windows']} windows (one compiled execute), "
+          f"occupancy {s['mean_occupancy']:.1f}/{srv.tick_width}, "
+          f"index p50={s['p50_ms']:.2f}ms p99={s['p99_ms']:.2f}ms, "
+          f"rebuilds {s['rebuilds']}")
 
 
 if __name__ == "__main__":

@@ -11,13 +11,15 @@ Public surface:
 from repro.core.batch import SEARCH, INSERT, DELETE
 from repro.core.engine import BACKENDS, Probe, SearchEngine, get_engine
 from repro.core.index import (
-    PIConfig, PIIndex, build, empty, execute, execute_impl, lookup, traverse,
+    PIConfig, PIIndex, build, empty, execute, execute_impl,
+    execute_trace_count, lookup, traverse,
     rebuild, maybe_rebuild, needs_rebuild, range_agg, search_batch,
     insert_batch, delete_batch, with_backend,
 )
 from repro.core.distributed import (
     ShardedPIIndex, build_sharded, execute_sharded, make_sharded_executor,
-    rebuild_sharded, collect_pairs, dispatch_plan, scatter_to_buffer,
+    rebuild_sharded, maybe_rebuild_sharded, maybe_rebuild_shards,
+    collect_pairs, dispatch_plan, scatter_to_buffer,
 )
 from repro.core.rebalance import (
     rebalance_from_load, rebalance_from_sample, load_imbalance,
@@ -26,13 +28,14 @@ from repro.core.ref import RefIndex
 
 __all__ = [
     "SEARCH", "INSERT", "DELETE", "PIConfig", "PIIndex", "build", "empty",
-    "execute", "execute_impl", "lookup", "traverse", "rebuild",
-    "maybe_rebuild", "needs_rebuild", "range_agg", "search_batch",
+    "execute", "execute_impl", "execute_trace_count", "lookup", "traverse",
+    "rebuild", "maybe_rebuild", "needs_rebuild", "range_agg", "search_batch",
     "insert_batch", "delete_batch", "with_backend",
     "SearchEngine", "get_engine", "Probe", "BACKENDS",
     "ShardedPIIndex", "build_sharded",
     "execute_sharded", "make_sharded_executor", "rebuild_sharded",
-    "collect_pairs", "dispatch_plan", "scatter_to_buffer",
+    "maybe_rebuild_sharded", "maybe_rebuild_shards", "collect_pairs",
+    "dispatch_plan", "scatter_to_buffer",
     "rebalance_from_load", "rebalance_from_sample", "load_imbalance",
     "RefIndex",
 ]

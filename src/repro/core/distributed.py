@@ -154,7 +154,13 @@ def _local_execute(shard: pi.PIIndex, fences, ops, qkeys, qvals,
     dest = jnp.clip(
         jnp.searchsorted(fences[1:-1], qkeys.astype(kdt), side="right"),
         0, S - 1).astype(jnp.int32)
-    order, slot, keep, n_drop = dispatch_plan(dest, S, cap, sort_key=qkeys)
+    order, slot, keep, _ = dispatch_plan(dest, S, cap, sort_key=qkeys)
+    # drop accounting counts REAL queries only: sentinel padding routes to
+    # the last shard and sorts after real keys there, so pads are evicted
+    # first and their loss is free — reporting them would make every
+    # mostly-padded (deadline-sealed) batch look like an overflow
+    n_drop = jnp.sum(~keep & (qkeys.astype(kdt)[order] != sent)) \
+        .astype(jnp.int32)
     send_ops = scatter_to_buffer(ops, order, slot, S, cap, SEARCH)
     send_keys = scatter_to_buffer(qkeys.astype(kdt), order, slot, S, cap, sent)
     send_vals = scatter_to_buffer(qvals, order, slot, S, cap, 0)
@@ -246,6 +252,30 @@ def execute_sharded(state: ShardedPIIndex, mesh: Mesh, ops, qkeys, qvals,
 def rebuild_sharded(state: ShardedPIIndex) -> ShardedPIIndex:
     """Per-shard deferred rebuild — embarrassingly parallel (paper §4.1)."""
     shards = jax.vmap(pi.rebuild)(state.shards)
+    return ShardedPIIndex(shards=shards, fences=state.fences,
+                          n_shards=state.n_shards)
+
+
+@jax.jit
+def maybe_rebuild_shards(shards: pi.PIIndex):
+    """Branchless daemon on stacked shard leaves: rebuild all iff any due.
+
+    All-or-none keeps a single cond (vs per-shard conds with mismatched
+    pytrees); rebuilds of not-yet-due shards are semantics-preserving and
+    amortized, exactly like the paper's periodic daemon sweep.  Returns
+    ``(shards, any_overflow, rebuilt)`` — the overflow flag is snapshot
+    *before* the rebuild resets it on the state (overflow is data loss
+    and must stay observable).
+    """
+    ovf = jnp.any(shards.overflow)
+    due = jnp.any(jax.vmap(pi.needs_rebuild)(shards))
+    shards = jax.lax.cond(due, jax.vmap(pi.rebuild), lambda s: s, shards)
+    return shards, ovf, due
+
+
+def maybe_rebuild_sharded(state: ShardedPIIndex) -> ShardedPIIndex:
+    """State-level wrapper of ``maybe_rebuild_shards``."""
+    shards, _, _ = maybe_rebuild_shards(state.shards)
     return ShardedPIIndex(shards=shards, fences=state.fences,
                           n_shards=state.n_shards)
 

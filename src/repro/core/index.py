@@ -235,6 +235,17 @@ def lookup(index: PIIndex, q: jnp.ndarray):
 # batch execution (Alg. 1 = partition→traverse→redistribute→execute)
 # ---------------------------------------------------------------------------
 
+# Incremented on every *trace* of execute_impl (Python side effects run at
+# trace time only): under jit this counts compilations, not calls.  The
+# serving pipeline pads every tick to one static width precisely so this
+# stays at 1 — tests assert it (deltas via execute_trace_count()).
+EXECUTE_TRACES = 0
+
+
+def execute_trace_count() -> int:
+    return EXECUTE_TRACES
+
+
 def execute_impl(index: PIIndex, ops: jnp.ndarray, qkeys: jnp.ndarray,
                  qvals: jnp.ndarray):
     """Execute one query batch; returns (new_index, (found, vals)).
@@ -247,6 +258,8 @@ def execute_impl(index: PIIndex, ops: jnp.ndarray, qkeys: jnp.ndarray,
     one scatter lane (the segment tail), which *is* the paper's
     "each modified node is owned by exactly one thread" invariant.
     """
+    global EXECUTE_TRACES
+    EXECUTE_TRACES += 1
     cfg = index.config
     B = ops.shape[0]
     kdt = index.keys.dtype

@@ -6,6 +6,13 @@ tick issues ONE sorted batch of index queries — admissions are INSERTs,
 lookups are SEARCHes, completions are DELETEs — exactly the paper's
 batch-processing model (Alg. 1) applied to a continuous-batching server.
 
+Ticks route through ``repro.pipeline``: a collection window pads every
+tick's ragged op list to one static ``tick_width`` (sentinel SEARCHes), so
+the whole serving run executes from a SINGLE compiled ``execute`` — before
+this, every distinct admits+lookups+completes length was a fresh trace.
+The dispatcher runs depth-0 (the scheduler needs lookup results within the
+tick) and raises on pending-buffer overflow instead of losing sessions.
+
 The model side runs real prefill/decode steps on CPU for the small
 configs (examples/ycsb_serve.py) and lowers for the pod meshes via the
 same step builders the dry-run uses.
@@ -13,17 +20,19 @@ same step builders the dry-run uses.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DELETE, INSERT, SEARCH, PIConfig, build, execute,
-                        maybe_rebuild)
+from repro.core import DELETE, INSERT, SEARCH, PIConfig, build
 from repro.models import make_decode_step, make_prefill_step
 from repro.models import decode as dec
 from repro.models.base import ModelConfig
+from repro.pipeline import (Collector, Dispatcher, PipelineMetrics,
+                            WindowConfig)
 
 
 @dataclasses.dataclass
@@ -38,7 +47,8 @@ class Server:
     """Continuous batching with a fixed pool of cache slots."""
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 8,
-                 max_len: int = 64, index_backend: str = "xla"):
+                 max_len: int = 64, index_backend: str = "xla",
+                 tick_width: int | None = None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -47,12 +57,20 @@ class Server:
         # selects the descent engine (core.engine) — "pallas" on TPU pods,
         # "xla" on CPU dev boxes; tile_q is shrunk to the table scale so a
         # scheduler tick stays a single-tile launch.
-        self.table = build(PIConfig(capacity=4 * n_slots,
-                                    pending_capacity=2 * n_slots, fanout=4,
-                                    backend=index_backend,
-                                    tile_q=min(256, 4 * n_slots)),
-                           jnp.zeros((0,), jnp.int32),
-                           jnp.zeros((0,), jnp.int32))
+        table = build(PIConfig(capacity=4 * n_slots,
+                               pending_capacity=2 * n_slots, fanout=4,
+                               backend=index_backend,
+                               tile_q=min(256, 4 * n_slots)),
+                      jnp.zeros((0,), jnp.int32),
+                      jnp.zeros((0,), jnp.int32))
+        # tick pipeline: every tick issues at most one op per slot per
+        # phase, so n_slots bounds the window; padding to this one static
+        # width is what keeps the server on a single compiled execute
+        self.tick_width = tick_width or max(8, n_slots)
+        self.pipeline_metrics = PipelineMetrics()
+        self._collector = Collector(WindowConfig(batch=self.tick_width))
+        self._dispatcher = Dispatcher(table, depth=0,
+                                      metrics=self.pipeline_metrics)
         self.free = list(range(n_slots))
         self.cache = dec.init_cache(cfg, n_slots, max_len)
         self.pos = np.zeros(n_slots, np.int32)
@@ -61,33 +79,41 @@ class Server:
         self._decode = jax.jit(make_decode_step(cfg))
         self.queries_processed = 0
 
+    @property
+    def table(self):
+        """Current session-table state (owned by the dispatcher)."""
+        return self._dispatcher.index
+
     # -- PI session-table tick (one sorted batch per scheduler round) -----
     def _index_tick(self, admits, lookups, completes):
-        ops, keys, vals = [], [], []
-        for rid, slot in admits:
-            ops.append(INSERT)
-            keys.append(rid)
-            vals.append(slot)
-        for rid in lookups:
-            ops.append(SEARCH)
-            keys.append(rid)
-            vals.append(0)
-        for rid in completes:
-            ops.append(DELETE)
-            keys.append(rid)
-            vals.append(0)
-        if not ops:
+        """Collect this tick's ops into a window, dispatch, map back.
+
+        The dispatcher runs synchronously (depth 0): a scheduler tick needs
+        its lookup results to resolve KV slots before decoding.
+        """
+        tick_ops = ([(INSERT, rid, slot) for rid, slot in admits]
+                    + [(SEARCH, rid, 0) for rid in lookups]
+                    + [(DELETE, rid, 0) for rid in completes])
+        if not tick_ops:
             return {}
-        self.table, (found, val) = execute(
-            self.table, jnp.asarray(np.array(ops, np.int32)),
-            jnp.asarray(np.array(keys, np.int32)),
-            jnp.asarray(np.array(vals, np.int32)))
-        self.table = maybe_rebuild(self.table)
-        self.queries_processed += len(ops)
-        out = {}
+        if len(tick_ops) > self.tick_width:
+            raise ValueError(
+                f"tick issues {len(tick_ops)} ops > tick_width "
+                f"{self.tick_width}; raise tick_width (ops per tick are "
+                f"bounded by the slot pool, so this is a config error)")
+        now = time.perf_counter()
+        for qid, (op, key, val) in enumerate(tick_ops):
+            admitted = self._collector.offer(now, op, key, val, qid)
+            assert admitted, "tick window sized to admit every tick op"
+        window = self._collector.take(now)
+        (result,) = self._dispatcher.submit(window)  # depth 0 → sync retire
+        per_qid = result.per_arrival()
+        self.queries_processed += len(tick_ops)
         base = len(admits)
+        out = {}
         for i, rid in enumerate(lookups):
-            out[rid] = int(val[base + i]) if bool(found[base + i]) else None
+            found, val = per_qid[base + i]
+            out[rid] = val if found else None
         return out
 
     def admit(self, reqs: List[Request]):

@@ -1,0 +1,39 @@
+"""Query pipeline — the serving front end above the PI core.
+
+The paper's Alg. 1 starts *before* the batch exists: incoming queries are
+collected, then distributed.  This package is that missing first stage —
+it turns open-loop arrival streams into the static sorted batches
+``core.execute`` runs, with an explicit policy surface:
+
+  workload    open-loop arrival generators (poisson/bursty/diurnal/hotkey
+              timing × the YCSB zipf op mix)
+  collector   fixed-capacity window: size/deadline seal triggers, duplicate
+              SEARCH coalescing, backpressure instead of overflow
+  dispatcher  double-buffered dispatch (host forms window k+1 while the
+              device executes k), single-shard or fence-routed sharded
+  metrics     enqueue→result latency histograms (p50/p95/p99), occupancy,
+              rebuild counts, qps
+
+See DESIGN.md §6 for the architecture and the backpressure contract.
+"""
+from repro.pipeline.collector import (
+    Collector, TRIGGER_DEADLINE, TRIGGER_FLUSH, TRIGGER_SIZE, Window,
+    WindowConfig,
+)
+from repro.pipeline.dispatcher import (
+    DispatchOverflowError, Dispatcher, PendingOverflowError, WindowResult,
+)
+from repro.pipeline.metrics import LatencyHistogram, PipelineMetrics
+from repro.pipeline.workload import (
+    PROCESSES, ArrivalConfig, ArrivalStream, arrival_times, make_arrivals,
+)
+
+__all__ = [
+    "ArrivalConfig", "ArrivalStream", "PROCESSES", "arrival_times",
+    "make_arrivals",
+    "Collector", "Window", "WindowConfig",
+    "TRIGGER_SIZE", "TRIGGER_DEADLINE", "TRIGGER_FLUSH",
+    "Dispatcher", "DispatchOverflowError", "PendingOverflowError",
+    "WindowResult",
+    "LatencyHistogram", "PipelineMetrics",
+]

@@ -1,0 +1,203 @@
+"""Collection window: arrivals → the static sorted-batch shape the core runs.
+
+This is the paper's first pipeline stage ("incoming queries are collected",
+Alg. 1) made explicit: a fixed-capacity window admits arrivals one at a
+time and seals into a sentinel-padded, statically-shaped batch when either
+trigger fires:
+
+* **size** — ``batch`` distinct query slots are occupied (full window);
+* **deadline** — the window has been open for ``deadline`` time units
+  (bounds the queueing delay of a query that arrives into a lull).
+
+Two policies ride on top:
+
+* **Coalescing** — a SEARCH on key *k* with no intervening write to *k*
+  inside the window returns, by the batch semantics (Def. 3 / Alg. 4),
+  exactly the result of the previous SEARCH on *k* — so it shares that
+  query's slot instead of occupying a new one.  One window slot can then
+  serve many arrivals, which is where skewed (zipf/hotkey) streams win
+  big.  Writes are never coalesced (a DELETE's result and a write's
+  last-writer position are arrival-order-dependent), and a write on *k*
+  invalidates *k*'s coalescing point.
+* **Backpressure** — ``offer`` returns ``False`` instead of admitting when
+  the window is sealed (full, or past its deadline).  The caller must
+  ``take()`` the sealed window and re-offer.  Nothing is ever dropped
+  silently: refusing admission here is what keeps the core's pending
+  buffer (whose overflow *is* data loss) out of reach of open-loop floods.
+
+The collector is deliberately host-side, dtype-faithful numpy: it is the
+boundary where ragged reality becomes the fixed shapes the jitted core
+demands, so exactly one ``execute`` executable serves every window.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.batch import DELETE, INSERT, SEARCH
+from repro.kernels.pi_search import sentinel_for
+
+TRIGGER_SIZE = "size"
+TRIGGER_DEADLINE = "deadline"
+TRIGGER_FLUSH = "flush"
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowConfig:
+    """Policy surface of the collection window."""
+
+    batch: int = 8192            # static batch shape (query slots per window)
+    deadline: float = math.inf   # max window age before a partial seal
+    coalesce: bool = True        # share slots between equivalent SEARCHes
+    key_dtype: str = "int32"
+
+
+@dataclasses.dataclass
+class Window:
+    """A sealed, sentinel-padded batch plus the arrival→slot map.
+
+    ``ops/keys/vals`` are exactly the arrays ``core.execute`` takes; pad
+    slots are SEARCHes on the sentinel key (legal by the engine contract,
+    results discarded).  Arrival ``qids[i]`` reads its result from batch
+    position ``slots[i]`` — several arrivals may share a slot (coalescing).
+    """
+
+    ops: np.ndarray        # (batch,) int32
+    keys: np.ndarray       # (batch,) key dtype
+    vals: np.ndarray       # (batch,) int32
+    occupancy: int         # real query slots in use (<= batch)
+    qids: List[int]        # admitted arrivals, in admission order
+    slots: np.ndarray      # (n_arrivals,) int32 result slot per arrival
+    t_open: float          # admission time of the first arrival
+    t_enq: np.ndarray      # (n_arrivals,) float64 admission time per arrival
+    trigger: str           # size | deadline | flush
+
+    @property
+    def n_arrivals(self) -> int:
+        return len(self.qids)
+
+
+class Collector:
+    """Fixed-capacity admission window with size/deadline seal triggers."""
+
+    def __init__(self, cfg: WindowConfig):
+        if cfg.batch < 1:
+            raise ValueError("window batch must be >= 1")
+        self.cfg = cfg
+        self._sent = int(sentinel_for(np.dtype(cfg.key_dtype)))
+        # bound locals: offer() runs once per arrival and is the pipeline's
+        # host-side unit cost — keep its fast path free of attribute and
+        # dataclass-field chasing
+        self._batch = cfg.batch
+        self._deadline = cfg.deadline
+        self._coalesce = cfg.coalesce
+        self._reset()
+
+    def _reset(self):
+        self._ops: List[int] = []
+        self._keys: List[int] = []
+        self._vals: List[int] = []
+        self._qids: List[int] = []
+        self._slots: List[int] = []
+        self._t_enq: List[float] = []
+        self._t_open: Optional[float] = None
+        # key -> slot of the latest SEARCH with no write since (coalescing
+        # point); a write to the key deletes its entry
+        self._search_slot: Dict[int, int] = {}
+
+    # -- admission ---------------------------------------------------------
+
+    def _expired(self, now: float) -> bool:
+        return (self._t_open is not None
+                and now - self._t_open >= self.cfg.deadline)
+
+    def ready(self, now: Optional[float] = None) -> bool:
+        """A sealed window is waiting (size hit, or deadline passed)."""
+        if len(self._ops) >= self.cfg.batch:
+            return True
+        return now is not None and bool(self._ops) and self._expired(now)
+
+    def offer(self, t: float, op: int, key: int, val: int, qid: int) -> bool:
+        """Admit one arrival; ``False`` = backpressure (take() first).
+
+        Refusal is the *only* overload behaviour — the collector never
+        drops and never grows past the static shape.
+        """
+        ops = self._ops
+        slot = len(ops)
+        if slot >= self._batch:
+            return False
+        t_open = self._t_open
+        if t_open is None:
+            self._t_open = t
+        elif slot and t - t_open >= self._deadline:
+            return False
+        if key == self._sent:
+            raise ValueError("sentinel key is reserved for padding")
+        if op == SEARCH:
+            if self._coalesce:
+                shared = self._search_slot.get(key)
+                if shared is not None:
+                    slot = shared
+                else:
+                    self._search_slot[key] = slot
+                    ops.append(op)
+                    self._keys.append(key)
+                    self._vals.append(val)
+            else:
+                ops.append(op)
+                self._keys.append(key)
+                self._vals.append(val)
+        else:
+            # a write ends the coalescing run for this key: later SEARCHes
+            # see the write's effect, not the pre-write result
+            self._search_slot.pop(key, None)
+            ops.append(op)
+            self._keys.append(key)
+            self._vals.append(val)
+        self._qids.append(qid)
+        self._slots.append(slot)
+        self._t_enq.append(t)
+        return True
+
+    # -- sealing -----------------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        """Arrivals admitted into the currently-open window."""
+        return len(self._qids)
+
+    def take(self, now: Optional[float] = None) -> Optional[Window]:
+        """Seal and return the open window (None when empty).
+
+        ``trigger`` records why the window closed — size, deadline, or an
+        explicit flush — so metrics can attribute short batches.
+        """
+        if not self._ops:
+            return None
+        if len(self._ops) >= self.cfg.batch:
+            trigger = TRIGGER_SIZE
+        elif now is not None and self._expired(now):
+            trigger = TRIGGER_DEADLINE
+        else:
+            trigger = TRIGGER_FLUSH
+        B = self.cfg.batch
+        kdt = np.dtype(self.cfg.key_dtype)
+        n = len(self._ops)
+        ops = np.full((B,), SEARCH, np.int32)
+        keys = np.full((B,), self._sent, kdt)
+        vals = np.zeros((B,), np.int32)
+        ops[:n] = self._ops
+        keys[:n] = np.asarray(self._keys, dtype=kdt)
+        vals[:n] = self._vals
+        win = Window(ops=ops, keys=keys, vals=vals, occupancy=n,
+                     qids=self._qids,
+                     slots=np.asarray(self._slots, np.int32),
+                     t_open=float(self._t_open),
+                     t_enq=np.asarray(self._t_enq, np.float64),
+                     trigger=trigger)
+        self._reset()
+        return win

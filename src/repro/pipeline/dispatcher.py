@@ -1,0 +1,190 @@
+"""Double-buffered dispatch: overlap window formation with device execution.
+
+JAX dispatch is asynchronous: ``execute`` returns array futures
+immediately, and the new index state — itself a bundle of futures — can be
+fed straight into the *next* ``execute`` without waiting.  The dispatcher
+exploits that to run the pipeline open: while the device executes window
+*k*, the host is back in the collector forming window *k+1*.  Only when a
+window is *retired* (its results materialized to numpy) does the host
+block, and with ``depth >= 1`` that happens one window late — by which
+time the device has usually finished.  ``depth=0`` degrades to the naive
+form-then-execute loop (the benchmark baseline, and what the serving
+scheduler uses because it needs results within the tick).
+
+Routing: a ``PIIndex`` executes locally via the fused ``_step_single``
+program; a ``ShardedPIIndex`` goes through
+``core.distributed.execute_sharded``, whose fence partitioning routes each
+window's per-shard slices with one ``all_to_all`` each way — the
+dispatcher is the same either way.
+
+Failure contract: the core's pending-buffer ``overflow`` flag means a net
+insert was silently dropped — data loss.  The collector's backpressure
+makes it unreachable under normal policy (a window can net-insert at most
+``batch`` keys), but a misconfigured geometry (``batch > pending_capacity``)
+can still trip it, so the dispatcher snapshots the flag after every
+execute (a fresh device scalar — the rebuild that follows would reset the
+flag on the state itself) and raises ``PendingOverflowError`` at
+retirement.  Sharded routing has an analogous loss mode — a fence bucket
+exceeding its ``capacity_factor`` drops real queries — surfaced as
+``DispatchOverflowError`` the same way.  Rebuild bookkeeping rides the
+same snapshot mechanism, so none of these checks force an early sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed as dist
+from repro.core import index as pi
+from repro.pipeline.collector import Window
+from repro.pipeline.metrics import PipelineMetrics
+
+
+class PendingOverflowError(RuntimeError):
+    """The index dropped net inserts: pending buffer overflowed mid-window."""
+
+
+class DispatchOverflowError(RuntimeError):
+    """Sharded routing dropped queries: a fence bucket exceeded its send
+    capacity (``capacity_factor`` too small for the window's skew)."""
+
+
+@jax.jit
+def _step_single(index, ops, keys, vals):
+    """Execute + overflow snapshot + rebuild-if-due, ONE dispatch.
+
+    Fused so a window costs a single device program: eager ``lax.cond``
+    per window was ~15x the execute itself.  Deliberately NOT donating the
+    index (unlike ``core.execute``): buffer donation forces the CPU client
+    into synchronous dispatch, which serializes host formation with device
+    execution — the exact overlap double-buffering exists to create.  The
+    price is one transient extra copy of the index state in memory.
+    """
+    new_index, (found, val) = pi.execute_impl(index, ops, keys, vals)
+    ovf = new_index.overflow
+    due = pi.needs_rebuild(new_index)
+    new_index = jax.lax.cond(due, pi.rebuild, lambda i: i, new_index)
+    return new_index, found, val, ovf, due
+
+
+@dataclasses.dataclass
+class WindowResult:
+    """A retired window: per-slot results + the arrival→slot map to read them."""
+
+    window: Window
+    found: np.ndarray      # (batch,) bool
+    val: np.ndarray        # (batch,) int32
+    t_retired: float
+    rebuilt: bool
+
+    def per_arrival(self) -> Dict[int, Tuple[bool, int]]:
+        """qid → (found, val), fanning shared slots back out to arrivals."""
+        out = {}
+        for qid, slot in zip(self.window.qids, self.window.slots):
+            out[qid] = (bool(self.found[slot]), int(self.val[slot]))
+        return out
+
+    def latencies(self) -> np.ndarray:
+        """Per-arrival enqueue→result latency, on the caller's time axis."""
+        return self.t_retired - self.window.t_enq
+
+
+@dataclasses.dataclass
+class _InFlight:
+    window: Window
+    found: jnp.ndarray
+    val: jnp.ndarray
+    overflow: jnp.ndarray  # snapshot scalar, taken before the rebuild reset
+    rebuilt: jnp.ndarray
+    dropped: Optional[jnp.ndarray]  # sharded routing drops (None: local)
+
+
+class Dispatcher:
+    """Owns the index state; executes sealed windows against it in order."""
+
+    def __init__(self, index, *, mesh=None, depth: int = 1,
+                 check_overflow: bool = True,
+                 capacity_factor: float = 2.0,
+                 metrics: Optional[PipelineMetrics] = None,
+                 clock=time.perf_counter):
+        if isinstance(index, dist.ShardedPIIndex) and mesh is None:
+            raise ValueError("a ShardedPIIndex needs its mesh for routing")
+        self._index = index
+        self._mesh = mesh
+        self.depth = max(0, int(depth))
+        self.check_overflow = check_overflow
+        self.capacity_factor = capacity_factor
+        self.metrics = metrics
+        self._clock = clock
+        self._inflight: List[_InFlight] = []
+
+    @property
+    def index(self):
+        """Current index state (futures included — reading it may sync)."""
+        return self._index
+
+    # -- execution ---------------------------------------------------------
+
+    def _step(self, ops, keys, vals):
+        """One execute + rebuild-if-due → (found, val, ovf, rebuilt, drop)."""
+        if isinstance(self._index, dist.ShardedPIIndex):
+            state, (found, val), _, dropped = dist.execute_sharded(
+                self._index, self._mesh, ops, keys, vals,
+                capacity_factor=self.capacity_factor)
+            shards, ovf, rebuilt = dist.maybe_rebuild_shards(state.shards)
+            self._index = dist.ShardedPIIndex(
+                shards=shards, fences=state.fences, n_shards=state.n_shards)
+            dropped = jnp.sum(dropped)
+        else:
+            self._index, found, val, ovf, rebuilt = _step_single(
+                self._index, ops, keys, vals)
+            dropped = None
+        return found, val, ovf, rebuilt, dropped
+
+    def submit(self, window: Window) -> List[WindowResult]:
+        """Dispatch a sealed window; retire whatever exceeds the depth.
+
+        Returns the windows retired by this call (possibly empty) so
+        callers can stream results without a separate polling loop.
+        """
+        found, val, ovf, rebuilt, dropped = self._step(
+            jnp.asarray(window.ops), jnp.asarray(window.keys),
+            jnp.asarray(window.vals))
+        self._inflight.append(
+            _InFlight(window, found, val, ovf, rebuilt, dropped))
+        retired = []
+        while len(self._inflight) > self.depth:
+            retired.append(self._retire(self._inflight.pop(0)))
+        return retired
+
+    def flush(self) -> List[WindowResult]:
+        """Retire every in-flight window (blocks until the device drains)."""
+        retired = [self._retire(f) for f in self._inflight]
+        self._inflight = []
+        return retired
+
+    def _retire(self, infl: _InFlight) -> WindowResult:
+        found = np.asarray(infl.found)   # blocks on the device here
+        val = np.asarray(infl.val)
+        if self.check_overflow and bool(infl.overflow):
+            raise PendingOverflowError(
+                "pending buffer overflowed while executing a window: net "
+                "inserts were dropped.  Grow PIConfig.pending_capacity "
+                "above the window batch, or rebuild more aggressively.")
+        if self.check_overflow and infl.dropped is not None \
+                and int(infl.dropped) > 0:
+            raise DispatchOverflowError(
+                f"fence routing dropped {int(infl.dropped)} queries: a "
+                f"shard's send bucket overflowed.  Raise capacity_factor "
+                f"({self.capacity_factor}) or rebalance the fences.")
+        res = WindowResult(window=infl.window, found=found, val=val,
+                           t_retired=self._clock(),
+                           rebuilt=bool(infl.rebuilt))
+        if self.metrics is not None:
+            self.metrics.on_retire(res)
+        return res

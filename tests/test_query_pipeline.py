@@ -1,0 +1,362 @@
+"""Query pipeline: workload → collector → dispatcher vs the RefIndex oracle.
+
+The pipeline's correctness contract: replaying an interleaved arrival
+stream through collection windows (with coalescing, deadline-triggered
+short batches and double-buffered dispatch) must produce exactly the
+per-query results and final index state of a sequential, arrival-order
+replay against ``core.ref.RefIndex``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DELETE, INSERT, SEARCH, PIConfig, RefIndex, build,
+                        build_sharded, rebuild)
+from repro.core import index as pi_index
+from repro.pipeline import (ArrivalConfig, Collector, DispatchOverflowError,
+                            Dispatcher, PendingOverflowError, PipelineMetrics,
+                            TRIGGER_DEADLINE, TRIGGER_SIZE, WindowConfig,
+                            make_arrivals)
+from repro import data as data_mod
+
+
+# ---------------------------------------------------------------------------
+# replay harness
+# ---------------------------------------------------------------------------
+
+def replay_stream(disp, col, t, ops, keys, vals):
+    """Push a whole stream through collector+dispatcher; qid → (found, val)."""
+    results = {}
+
+    def drain(retired):
+        for r in retired:
+            results.update(r.per_arrival())
+
+    for i in range(len(ops)):
+        while not col.offer(float(t[i]), int(ops[i]), int(keys[i]),
+                            int(vals[i]), i):
+            drain(disp.submit(col.take(float(t[i]))))
+    tail = col.take()
+    if tail is not None:
+        drain(disp.submit(tail))
+    drain(disp.flush())
+    return results
+
+
+def check_against_oracle(results, ref_results, ops):
+    for i in range(len(ops)):
+        found, val = results[i]
+        if ops[i] == SEARCH:
+            assert (val if found else None) == ref_results[i], f"query {i}"
+        elif ops[i] == DELETE:
+            assert found == (ref_results[i] is not None), f"delete {i}"
+
+
+def final_pairs(index):
+    """Live (key, val) dict of a PIIndex after folding the pending buffer."""
+    fin = rebuild(index)
+    n = int(fin.n)
+    return dict(zip(np.asarray(fin.keys[:n]).tolist(),
+                    np.asarray(fin.vals[:n]).tolist()))
+
+
+def make_stream(n=600, key_space=40, seed=0):
+    """Interleaved ops over few keys: duplicates guaranteed to straddle
+    windows.  Times alternate dense bursts (size trigger) with sparse
+    stretches (deadline trigger)."""
+    rng = np.random.default_rng(seed)
+    ops = rng.integers(0, 3, n).astype(np.int32)
+    keys = rng.integers(0, key_space, n).astype(np.int32)
+    vals = rng.integers(0, 1000, n).astype(np.int32)
+    # structured bursts: 40 dense arrivals (fills a 32-slot window well
+    # inside the deadline → size trigger) then 5 sparse ones (deadline)
+    block = np.concatenate([np.full(40, 0.01), np.full(5, 3.0)])
+    gaps = np.tile(block, n // len(block) + 1)[:n]
+    return np.cumsum(gaps), ops, keys, vals
+
+
+def seeded_index(cfg, key_space=40, n0=20, seed=1):
+    rng = np.random.default_rng(seed)
+    keys0 = rng.choice(key_space, n0, replace=False).astype(np.int32)
+    vals0 = rng.integers(0, 1000, n0).astype(np.int32)
+    idx = build(cfg, jnp.asarray(keys0), jnp.asarray(vals0))
+    return idx, RefIndex.build(keys0, vals0)
+
+
+# ---------------------------------------------------------------------------
+# oracle replay (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+def test_pipeline_matches_oracle_replay():
+    cfg = PIConfig(capacity=256, pending_capacity=128, fanout=4)
+    idx, ref = seeded_index(cfg)
+    t, ops, keys, vals = make_stream()
+    mets = PipelineMetrics()
+    col = Collector(WindowConfig(batch=32, deadline=5.0, coalesce=True))
+    disp = Dispatcher(idx, depth=2, metrics=mets, clock=lambda: 0.0)
+
+    results = replay_stream(disp, col, t, ops, keys, vals)
+    check_against_oracle(results, ref.execute(ops, keys, vals), ops)
+    assert final_pairs(disp.index) == ref.data
+
+    # the stream must actually have exercised the policy surface
+    assert TRIGGER_SIZE in mets.triggers, "no size-triggered window"
+    assert TRIGGER_DEADLINE in mets.triggers, "no deadline-triggered window"
+    s = mets.summary()
+    assert s["coalesced"] > 0, "no duplicate SEARCH was coalesced"
+    assert s["arrivals"] == len(ops)
+    assert s["executed_queries"] < s["arrivals"]
+
+
+@pytest.mark.parametrize("coalesce", [False, True])
+def test_depth_is_semantics_free(coalesce):
+    """depth 0 (sync) and depth 3 (deep double-buffer) agree bit-for-bit."""
+    cfg = PIConfig(capacity=256, pending_capacity=128, fanout=4)
+    t, ops, keys, vals = make_stream(seed=7)
+    outs = []
+    for depth in (0, 3):
+        idx, _ = seeded_index(cfg)
+        col = Collector(WindowConfig(batch=32, deadline=5.0,
+                                     coalesce=coalesce))
+        disp = Dispatcher(idx, depth=depth, clock=lambda: 0.0)
+        results = replay_stream(disp, col, t, ops, keys, vals)
+        outs.append((results, final_pairs(disp.index)))
+    assert outs[0] == outs[1]
+
+
+def test_sharded_dispatch_matches_oracle():
+    """Windows routed through the fence-partitioned executor == oracle."""
+    cfg = PIConfig(capacity=256, pending_capacity=128, fanout=4)
+    rng = np.random.default_rng(3)
+    keys0 = rng.choice(40, 20, replace=False).astype(np.int32)
+    vals0 = rng.integers(0, 1000, 20).astype(np.int32)
+    mesh = jax.make_mesh((1,), ("data",))
+    state = build_sharded(cfg, 1, keys0, vals0)
+    ref = RefIndex.build(keys0, vals0)
+    t, ops, keys, vals = make_stream(n=300, seed=5)
+    col = Collector(WindowConfig(batch=32, deadline=5.0))
+    disp = Dispatcher(state, mesh=mesh, depth=1, clock=lambda: 0.0)
+    results = replay_stream(disp, col, t, ops, keys, vals)
+    check_against_oracle(results, ref.execute(ops, keys, vals), ops)
+    shard0 = jax.tree.map(lambda x: x[0], disp.index.shards)
+    assert final_pairs(shard0) == ref.data
+
+
+def test_sharded_dispatch_surfaces_routing_drops():
+    """A fence bucket overflowing its send capacity must raise, not lose
+    queries silently — while harmless padding drops must NOT raise."""
+    cfg = PIConfig(capacity=256, pending_capacity=128, fanout=4)
+    keys0 = np.arange(0, 64, 2, dtype=np.int32)
+    state = build_sharded(cfg, 1, keys0, keys0)
+    mesh = jax.make_mesh((1,), ("data",))
+    # capacity_factor 0.25: a full 32-slot window offers 32 queries to the
+    # single shard but only ceil(32*0.25)=8 survive routing
+    disp = Dispatcher(state, mesh=mesh, depth=0, capacity_factor=0.25,
+                      clock=lambda: 0.0)
+    col = Collector(WindowConfig(batch=32, coalesce=False))
+    for i in range(32):
+        assert col.offer(float(i), SEARCH, int(keys0[i % len(keys0)]), 0, i)
+    with pytest.raises(DispatchOverflowError, match="fence routing"):
+        disp.submit(col.take())
+
+    # mostly-padding short batch under the same tight capacity: the pads
+    # overflow the bucket, the real queries survive → no error
+    state2 = build_sharded(cfg, 1, keys0, keys0)
+    disp2 = Dispatcher(state2, mesh=mesh, depth=0, capacity_factor=0.25,
+                       clock=lambda: 0.0)
+    col2 = Collector(WindowConfig(batch=32, coalesce=False))
+    for i in range(4):
+        assert col2.offer(float(i), SEARCH, int(keys0[i]), 0, i)
+    (res,) = disp2.submit(col2.take())
+    assert res.per_arrival() == {i: (True, int(keys0[i])) for i in range(4)}
+
+
+def test_sharded_dispatch_requires_mesh():
+    cfg = PIConfig(capacity=64, pending_capacity=32, fanout=4)
+    state = build_sharded(cfg, 1, np.arange(4, dtype=np.int32),
+                          np.arange(4, dtype=np.int32))
+    with pytest.raises(ValueError, match="mesh"):
+        Dispatcher(state)
+
+
+# ---------------------------------------------------------------------------
+# collector policy
+# ---------------------------------------------------------------------------
+
+def test_collector_size_trigger_and_backpressure():
+    col = Collector(WindowConfig(batch=4, coalesce=False))
+    for i in range(4):
+        assert col.offer(float(i), SEARCH, 10 + i, 0, i)
+    # full: refuses (backpressure), nothing dropped
+    assert not col.offer(4.0, SEARCH, 99, 0, 4)
+    w = col.take()
+    assert w.trigger == TRIGGER_SIZE
+    assert w.occupancy == 4 and w.n_arrivals == 4
+    # the refused arrival was never admitted; re-offering now succeeds
+    assert col.offer(4.0, SEARCH, 99, 0, 4)
+    assert col.pending == 1
+
+
+def test_collector_deadline_trigger_short_batch():
+    col = Collector(WindowConfig(batch=8, deadline=1.0))
+    assert col.offer(0.0, INSERT, 5, 50, 0)
+    assert col.offer(0.5, SEARCH, 5, 0, 1)
+    # past the deadline: refuse, seal, short batch padded to shape 8
+    assert not col.offer(1.5, SEARCH, 6, 0, 2)
+    assert col.ready(1.5)
+    w = col.take(1.5)
+    assert w.trigger == TRIGGER_DEADLINE
+    assert w.occupancy == 2
+    assert w.ops.shape == (8,)
+    sent = np.iinfo(np.int32).max
+    assert (w.keys[2:] == sent).all() and (w.ops[2:] == SEARCH).all()
+
+
+def test_collector_coalesces_read_runs_only():
+    col = Collector(WindowConfig(batch=8, coalesce=True))
+    assert col.offer(0.0, SEARCH, 7, 0, 0)   # slot 0
+    assert col.offer(0.1, SEARCH, 7, 0, 1)   # coalesced into slot 0
+    assert col.offer(0.2, INSERT, 7, 42, 2)  # write: slot 1, breaks the run
+    assert col.offer(0.3, SEARCH, 7, 0, 3)   # post-write read: new slot 2
+    assert col.offer(0.4, SEARCH, 7, 0, 4)   # coalesced into slot 2
+    w = col.take()
+    assert w.occupancy == 3
+    assert w.slots.tolist() == [0, 0, 1, 2, 2]
+
+
+def test_collector_rejects_sentinel_key():
+    col = Collector(WindowConfig(batch=4))
+    with pytest.raises(ValueError, match="sentinel"):
+        col.offer(0.0, SEARCH, np.iinfo(np.int32).max, 0, 0)
+
+
+def test_collector_empty_take_is_none():
+    assert Collector(WindowConfig(batch=4)).take() is None
+
+
+# ---------------------------------------------------------------------------
+# overflow surfacing (data loss must be loud)
+# ---------------------------------------------------------------------------
+
+def _overflowing_window_setup():
+    # pending capacity 8, one window of 32 distinct net inserts: the core
+    # clamps pn and raises its overflow flag — the pipeline must escalate
+    cfg = PIConfig(capacity=64, pending_capacity=8, fanout=4)
+    idx = build(cfg, jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32))
+    col = Collector(WindowConfig(batch=32))
+    for i in range(32):
+        assert col.offer(float(i), INSERT, 100 + i, i, i)
+    return idx, col.take()
+
+
+def test_dispatcher_raises_on_pending_overflow():
+    idx, window = _overflowing_window_setup()
+    disp = Dispatcher(idx, depth=0)
+    with pytest.raises(PendingOverflowError):
+        disp.submit(window)
+
+
+def test_dispatcher_overflow_check_is_optional():
+    idx, window = _overflowing_window_setup()
+    disp = Dispatcher(idx, depth=0, check_overflow=False)
+    (res,) = disp.submit(window)  # policy off: no raise, results delivered
+    assert res.found.shape == (32,)
+
+
+# ---------------------------------------------------------------------------
+# workload generators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("process", ["poisson", "bursty", "diurnal",
+                                     "hotkey"])
+def test_arrival_streams_are_well_formed(process):
+    keys = np.arange(1000, dtype=np.int32)
+    acfg = ArrivalConfig(process=process, rate=1e4, n_arrivals=2048)
+    stream = make_arrivals(acfg, data_mod.YCSBConfig(write_ratio=0.2), keys)
+    assert len(stream) == 2048
+    assert (np.diff(stream.t) >= 0).all(), "times must be nondecreasing"
+    assert stream.t[-1] > 0
+    assert set(np.unique(stream.ops)) <= {SEARCH, INSERT}
+    # mean rate within 2x of nominal (loose: modulated processes wander)
+    mean_rate = len(stream) / stream.t[-1]
+    assert 0.5 * acfg.rate < mean_rate < 2.0 * acfg.rate
+
+
+def test_hotkey_stream_is_adversarially_skewed():
+    keys = np.arange(1000, dtype=np.int32)
+    acfg = ArrivalConfig(process="hotkey", n_arrivals=4096, hot_keys=4,
+                         hot_frac=0.8)
+    stream = make_arrivals(acfg, data_mod.YCSBConfig(), keys)
+    _, counts = np.unique(stream.keys, return_counts=True)
+    top4 = np.sort(counts)[-4:].sum()
+    assert top4 > 0.7 * len(stream), "hot set should dominate the stream"
+
+
+def test_unknown_process_rejected():
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        ArrivalConfig(process="flat")
+
+
+# ---------------------------------------------------------------------------
+# serving through the pipeline
+# ---------------------------------------------------------------------------
+
+def test_server_runs_from_one_execute_compilation():
+    """The whole ycsb_serve-style workload = ONE compiled execute.
+
+    Every scheduler tick is padded to the static tick_width by the
+    collector, so admits/lookups/completes of any mix hit the same
+    executable.  The counter increments once per *trace* of execute_impl.
+    """
+    from repro import optim
+    from repro.configs import get_config, smoke
+    from repro.launch import serve as serve_mod
+    from repro.models import init_train_state
+
+    cfg = smoke(get_config("phi3-mini-3.8b"))
+    params, _ = init_train_state(cfg, optim.OptConfig(), jax.random.key(0))
+    srv = serve_mod.Server(cfg, params, n_slots=4, max_len=32)
+    rng = np.random.default_rng(0)
+    reqs = [serve_mod.Request(rid=100 + i,
+                              prompt=rng.integers(0, cfg.vocab, 4),
+                              max_new=3) for i in range(6)]
+    jax.clear_caches()  # fresh jit caches: the delta below counts traces
+    base = pi_index.execute_trace_count()
+    srv.admit(reqs[:4])
+    done = set()
+    for _ in range(12):
+        done.update(srv.tick())
+        if len(done) == 4:
+            break
+    srv.admit(reqs[4:])  # admit + lookup + complete ticks all happened
+    assert done == {100, 101, 102, 103}
+    assert pi_index.execute_trace_count() - base == 1, \
+        "server ticks must share one compiled execute"
+    s = srv.pipeline_metrics.summary()
+    assert s["arrivals"] == srv.queries_processed
+    assert s["windows"] >= 3
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_latency_histogram_percentiles_are_ordered():
+    from repro.pipeline import LatencyHistogram
+    h = LatencyHistogram()
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(mean=-6.0, sigma=1.0, size=10_000)
+    h.record(samples)
+    p50, p95, p99 = (h.percentile(q) for q in (50, 95, 99))
+    assert p50 <= p95 <= p99
+    # within histogram resolution of the exact quantiles
+    assert abs(np.log(p50) - np.log(np.quantile(samples, 0.5))) < 0.35
+    assert h.count == 10_000
+
+
+def test_empty_histogram_is_nan():
+    from repro.pipeline import LatencyHistogram
+    assert np.isnan(LatencyHistogram().percentile(50))
