@@ -61,6 +61,38 @@ def _one_batch(idx, ops, keys, vals):
     return maybe_rebuild(idx), res
 
 
+def replay_stream(disp, col, stream, *, bulk: bool = True,
+                  chunk: int | None = None, clock=time.perf_counter):
+    """Saturation-replay an ArrivalStream through collector + dispatcher.
+
+    The shared driver loop for every pipeline benchmark/example: arrivals
+    are stamped with ``clock`` at admission and pushed as fast as the
+    window admits.  ``bulk=True`` admits via ``Collector.offer_many`` one
+    ``chunk`` at a time (default: one window's worth, so window formation
+    for chunk k+1 overlaps the device executing chunk k); ``bulk=False``
+    is the per-arrival ``offer`` loop — the pre-vectorization baseline the
+    admission benchmark compares against.  Returns every retired
+    ``WindowResult`` in retirement order.
+    """
+    if bulk:
+        return disp.run(stream, collector=col, chunk=chunk, clock=clock)
+    retired = []
+    submit, take = disp.submit, col.take
+    # python ints: the admission loop is the host-side cost under test
+    # and numpy scalar boxing would double it
+    ops, keys, vals = (stream.ops.tolist(), stream.keys.tolist(),
+                       stream.vals.tolist())
+    offer = col.offer
+    for i in range(len(stream)):
+        while not offer(clock(), ops[i], keys[i], vals[i], i):
+            retired += submit(take(clock()))
+    tail = take(clock())
+    if tail is not None:
+        retired += submit(tail)
+    retired += disp.flush()
+    return retired
+
+
 def run_query_stream(idx, ycfg, keys, n_batches: int, warmup: int = 2):
     """Throughput of a YCSB query stream (queries/s)."""
     batches = [data_mod.ycsb_batch(ycfg, keys, step) for step in

@@ -13,7 +13,8 @@ python -m pytest -x -q
 
 if [[ -z "${SKIP_SMOKE:-}" ]]; then
   echo "--- pallas-interpret benchmark smoke (fig7, tiny sizes) ---"
-  PI_BACKEND=pallas-interpret python - <<'EOF'
+  # tiny-size smokes must not clobber the committed full-size BENCH json
+  PI_BACKEND=pallas-interpret BENCH_DIR="$(mktemp -d)" python - <<'EOF'
 import time
 from benchmarks.fig7_batch_size import main
 
@@ -21,6 +22,21 @@ t0 = time.time()
 rows = main(sizes=(1 << 12,), batches=(2048,), total=1 << 12)
 assert rows and all(int(r[-1]) > 0 for r in rows), rows
 print(f"smoke ok in {time.time() - t0:.1f}s: {rows}")
+EOF
+
+  echo "--- pipeline admission smoke (fig_pipeline, tiny sizes) ---"
+  BENCH_DIR="$(mktemp -d)" python - <<'EOF'
+import time
+from benchmarks.fig_pipeline import main
+
+t0 = time.time()
+rows = main(n_keys=1 << 10, batch=256, n_arrivals=1 << 12,
+            processes=("poisson",), thetas=(0.0,))
+adm = {r[3]: r[4] for r in rows if r[0] == "admission"}
+assert adm and adm["offer_many"] > adm["offer"], \
+    f"bulk admission regressed below the scalar offer loop: {adm}"
+print(f"pipeline smoke ok in {time.time() - t0:.1f}s: "
+      f"admission {adm['offer_many'] / adm['offer']:.1f}x")
 EOF
 fi
 echo "check.sh: all green"

@@ -102,9 +102,14 @@ class Server:
                 f"{self.tick_width}; raise tick_width (ops per tick are "
                 f"bounded by the slot pool, so this is a config error)")
         now = time.perf_counter()
-        for qid, (op, key, val) in enumerate(tick_ops):
-            admitted = self._collector.offer(now, op, key, val, qid)
-            assert admitted, "tick window sized to admit every tick op"
+        # bulk admission: the tick's ragged op list is already in hand, so
+        # one offer_many call forms the window instead of a per-op Python
+        # loop; the width check above guarantees nothing seals early
+        tick_arr = np.asarray(tick_ops, np.int32)
+        _, sealed = self._collector.offer_many(
+            np.full(len(tick_ops), now), tick_arr[:, 0], tick_arr[:, 1],
+            tick_arr[:, 2], np.arange(len(tick_ops)))
+        assert not sealed, "tick window sized to admit every tick op"
         window = self._collector.take(now)
         (result,) = self._dispatcher.submit(window)  # depth 0 → sync retire
         per_qid = result.per_arrival()

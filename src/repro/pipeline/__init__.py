@@ -8,13 +8,19 @@ it turns open-loop arrival streams into the static sorted batches
   workload    open-loop arrival generators (poisson/bursty/diurnal/hotkey
               timing × the YCSB zipf op mix)
   collector   fixed-capacity window: size/deadline seal triggers, duplicate
-              SEARCH coalescing, backpressure instead of overflow
+              SEARCH coalescing, backpressure instead of overflow; scalar
+              ``offer`` plus vectorized bulk ``offer_many`` (bit-identical
+              windows, ~5-20x the scalar admission throughput)
   dispatcher  double-buffered dispatch (host forms window k+1 while the
-              device executes k), single-shard or fence-routed sharded
+              device executes k), single-shard or fence-routed sharded;
+              ``Dispatcher.run`` fuses bulk admission with submit, and a
+              failed retirement poisons the dispatcher instead of letting
+              callers continue on post-loss state
   metrics     enqueue→result latency histograms (p50/p95/p99), occupancy,
               rebuild counts, qps
 
-See DESIGN.md §6 for the architecture and the backpressure contract.
+See DESIGN.md §6 for the architecture, the bulk-admission contract and
+the backpressure contract.
 """
 from repro.pipeline.collector import (
     Collector, TRIGGER_DEADLINE, TRIGGER_FLUSH, TRIGGER_SIZE, Window,

@@ -94,19 +94,39 @@ class Collector:
         self._batch = cfg.batch
         self._deadline = cfg.deadline
         self._coalesce = cfg.coalesce
+        self._kdt = np.dtype(cfg.key_dtype)
         self._reset()
 
     def _reset(self):
-        self._ops: List[int] = []
-        self._keys: List[int] = []
-        self._vals: List[int] = []
-        self._qids: List[int] = []
-        self._slots: List[int] = []
-        self._t_enq: List[float] = []
+        # slot-side state: the window's query slots live in preallocated
+        # buffers of the static shape — scalar offers write one element,
+        # bulk admission writes slices, and sealing hands the buffers to
+        # the Window outright (pad-fill only, no copy, no list boxing)
+        B = self._batch
+        self._buf_ops = np.empty(B, np.int32)
+        self._buf_keys = np.empty(B, self._kdt)
+        self._buf_vals = np.empty(B, np.int32)
+        self._n = 0               # occupied slots
+        # arrival-side state: (qid, slot, t_enq) per admitted arrival, as
+        # segments — scalar offers append to tail lists, bulk admission
+        # appends whole arrays; sealing concatenates once
+        self._n_arr = 0
+        self._seg_qids: List = []
+        self._seg_slots: List[np.ndarray] = []
+        self._seg_tenq: List[np.ndarray] = []
+        self._tail_qids: List[int] = []
+        self._tail_slots: List[int] = []
+        self._tail_tenq: List[float] = []
         self._t_open: Optional[float] = None
         # key -> slot of the latest SEARCH with no write since (coalescing
         # point); a write to the key deletes its entry
         self._search_slot: Dict[int, int] = {}
+        # bulk admission keeps its coalescing carry as sorted arrays (slot
+        # -1 = write-cleared) shadowing the dict; scalar offers materialize
+        # them first — per-key dict churn is exactly the host cost
+        # offer_many exists to avoid
+        self._lazy_keys: Optional[np.ndarray] = None
+        self._lazy_slots: Optional[np.ndarray] = None
 
     # -- admission ---------------------------------------------------------
 
@@ -116,18 +136,24 @@ class Collector:
 
     def ready(self, now: Optional[float] = None) -> bool:
         """A sealed window is waiting (size hit, or deadline passed)."""
-        if len(self._ops) >= self.cfg.batch:
+        if self._n >= self._batch:
             return True
-        return now is not None and bool(self._ops) and self._expired(now)
+        return now is not None and self._n_arr > 0 and self._expired(now)
 
     def offer(self, t: float, op: int, key: int, val: int, qid: int) -> bool:
         """Admit one arrival; ``False`` = backpressure (take() first).
 
         Refusal is the *only* overload behaviour — the collector never
-        drops and never grows past the static shape.
+        drops and never grows past the static shape.  Validation precedes
+        every state change: a raising ``offer`` leaves the collector
+        exactly as it found it (no stale ``_t_open`` from a rejected
+        arrival that could later fake a deadline expiry).
         """
-        ops = self._ops
-        slot = len(ops)
+        if key == self._sent:
+            raise ValueError("sentinel key is reserved for padding")
+        if self._lazy_keys is not None:
+            self._sync_search_slot()
+        slot = self._n
         if slot >= self._batch:
             return False
         t_open = self._t_open
@@ -135,8 +161,6 @@ class Collector:
             self._t_open = t
         elif slot and t - t_open >= self._deadline:
             return False
-        if key == self._sent:
-            raise ValueError("sentinel key is reserved for padding")
         if op == SEARCH:
             if self._coalesce:
                 shared = self._search_slot.get(key)
@@ -144,31 +168,279 @@ class Collector:
                     slot = shared
                 else:
                     self._search_slot[key] = slot
-                    ops.append(op)
-                    self._keys.append(key)
-                    self._vals.append(val)
+                    self._put(slot, op, key, val)
             else:
-                ops.append(op)
-                self._keys.append(key)
-                self._vals.append(val)
+                self._put(slot, op, key, val)
         else:
             # a write ends the coalescing run for this key: later SEARCHes
             # see the write's effect, not the pre-write result
             self._search_slot.pop(key, None)
-            ops.append(op)
-            self._keys.append(key)
-            self._vals.append(val)
-        self._qids.append(qid)
-        self._slots.append(slot)
-        self._t_enq.append(t)
+            self._put(slot, op, key, val)
+        self._tail_qids.append(qid)
+        self._tail_slots.append(slot)
+        self._tail_tenq.append(t)
+        self._n_arr += 1
         return True
+
+    def _put(self, slot: int, op: int, key: int, val: int):
+        self._buf_ops[slot] = op
+        self._buf_keys[slot] = key
+        self._buf_vals[slot] = val
+        self._n = slot + 1
+
+    # -- bulk admission ----------------------------------------------------
+
+    def offer_many(self, t, ops, keys, vals, qids):
+        """Admit a contiguous run of arrivals; ``(n_admitted, sealed)``.
+
+        Vectorized equivalent of the driver loop
+
+            for i in range(n):
+                while not offer(t[i], ops[i], keys[i], vals[i], qids[i]):
+                    sealed.append(take(t[i]))
+
+        guaranteed to produce *bit-identical* windows: the same
+        ops/keys/vals/occupancy/qids/slots/t_enq/trigger per sealed window
+        and the same residual open window afterwards.  Windows that fill
+        (size) or expire (deadline) mid-run are sealed internally and
+        returned in seal order; the trailing partial window stays open —
+        later ``offer``/``offer_many`` calls continue it and ``take()``
+        flushes it.  The host cost is one numpy pass per sealed window
+        instead of ~1–2 µs of Python per arrival, which is what lifts the
+        pipeline's admission ceiling (ROADMAP: "Vectorized admission").
+
+        Error contract — *stronger* than the scalar path: the whole run is
+        validated before any state changes, so a raising ``offer_many``
+        (sentinel key anywhere in the run, non-monotone times, ragged
+        arrays) leaves the collector untouched; no prefix is admitted.
+
+        Times must be nondecreasing (arrival order); all five arrays are
+        1-D of one shared length.
+        """
+        t = np.ascontiguousarray(t, np.float64)
+        ops = np.ascontiguousarray(ops, np.int32)
+        keys = np.ascontiguousarray(keys, np.dtype(self.cfg.key_dtype))
+        vals = np.ascontiguousarray(vals, np.int32)
+        qids = np.asarray(qids)
+        if t.ndim != 1 or not (ops.shape == keys.shape == vals.shape
+                               == qids.shape == t.shape):
+            raise ValueError("offer_many arrays must share one 1-D shape")
+        n = t.shape[0]
+        if n == 0:
+            return 0, []
+        # validate the entire run BEFORE mutating anything (atomic failure)
+        if np.any(keys == self._sent):
+            raise ValueError("sentinel key is reserved for padding")
+        if np.any(np.diff(t) < 0.0):
+            raise ValueError("offer_many arrival times must be nondecreasing")
+        sealed: List[Window] = []
+        start = 0
+        while start < n:
+            start = self._admit_chunk(t, ops, keys, vals, qids, start, sealed)
+        return n, sealed
+
+    def _admit_chunk(self, t, ops, keys, vals, qids, start: int,
+                     sealed: List[Window]) -> int:
+        """Admit arrivals from ``start`` up to the next seal boundary.
+
+        Appends any sealed window and returns the new start index.  One
+        call performs at most one seal, so coalescing state resets land
+        exactly where the scalar loop puts them.
+        """
+        cur = self._n
+        # entry refusals: window already full, or already expired at the
+        # chunk's first arrival — seal exactly as the driver's
+        # ``take(t[start])`` would, and let the next iteration reopen
+        if cur >= self._batch:
+            sealed.append(self.take(float(t[start])))
+            return start
+        if self._t_open is None:
+            t_open = float(t[start])
+            lo = start + 1            # the opening arrival never expires
+        else:
+            t_open = self._t_open
+            lo = start
+            if cur and float(t[start]) - t_open >= self._deadline:
+                sealed.append(self.take(float(t[start])))
+                return start
+        n = t.shape[0]
+        # cap the candidate segment: a window admits at most batch-cur new
+        # slots, so ~2x that keeps total re-scanned work O(n) even when
+        # every arrival coalesces into an already-open slot
+        cap_end = min(n, start + max(1024, 2 * (self._batch - cur)))
+        # deadline boundary: the first arrival with t - t_open >= deadline
+        # is refused.  The predicate must be the scalar offer's, bit for
+        # bit — t >= t_open + deadline is NOT the same test in floats —
+        # and fl(t - t_open) is nondecreasing (monotone rounding), so
+        # searchsorted on the differences finds the exact boundary.
+        dl_refusal = None
+        if self._deadline != math.inf and lo < cap_end:
+            off = int(np.searchsorted(t[lo:cap_end] - t_open,
+                                      self._deadline, side="left"))
+            if off < cap_end - lo:
+                dl_refusal = lo + off
+        end = cap_end if dl_refusal is None else dl_refusal
+        m = end - start
+        o = ops[start:end]
+        k = keys[start:end]
+        v = vals[start:end]
+        is_w = o != SEARCH
+        if self._coalesce:
+            newslot, slots, ckeys, cslots = self._coalesce_chunk(k, is_w, cur)
+        else:
+            newslot = np.ones(m, bool)
+            slots = cur + np.arange(m, dtype=np.int64)
+        excl = np.cumsum(newslot) - newslot  # new slots before each arrival
+        b_size = int(np.searchsorted(excl, self._batch - cur, side="left"))
+        if b_size < m:
+            # arrival start+b_size finds the window full → size seal
+            a, trigger = b_size, TRIGGER_SIZE
+        elif dl_refusal is not None:
+            # arrival at ``end`` is past the deadline; take() checks size
+            # first, so a window that also just filled reads as size
+            occ = cur + int(excl[m - 1]) + int(newslot[m - 1])
+            a = m
+            trigger = TRIGGER_SIZE if occ >= self._batch else TRIGGER_DEADLINE
+        else:
+            # no refusal inside the segment: admit all of it and keep the
+            # window open (even if exactly full — sealing waits for the
+            # next refused arrival, as in the scalar path)
+            self._admit_slice(t, o, k, v, qids, start, m, newslot, slots,
+                              cur, t_open)
+            if self._coalesce:
+                self._merge_carry(ckeys, cslots)
+            return end
+        self._admit_slice(t, o, k, v, qids, start, a, newslot, slots,
+                          cur, t_open)
+        sealed.append(self._seal(trigger))
+        return start + a
+
+    def _admit_slice(self, t, o, k, v, qids, start: int, a: int,
+                     newslot, slots, cur: int, t_open: float):
+        """Commit the chunk's first ``a`` arrivals into the open window."""
+        sel = newslot[:a]
+        occ = cur + int(np.count_nonzero(sel))
+        self._buf_ops[cur:occ] = o[:a][sel]
+        self._buf_keys[cur:occ] = k[:a][sel]
+        self._buf_vals[cur:occ] = v[:a][sel]
+        self._n = occ
+        self._flush_tail()
+        # copies, not views: the caller owns the input arrays and may reuse
+        # them before this window seals
+        self._seg_qids.append(np.array(qids[start:start + a]))
+        self._seg_slots.append(slots[:a].astype(np.int32))
+        self._seg_tenq.append(np.array(t[start:start + a]))
+        self._n_arr += a
+        self._t_open = t_open
+
+    def _coalesce_chunk(self, k: np.ndarray, is_w: np.ndarray, cur: int):
+        """Vectorized slot assignment for one candidate segment.
+
+        A SEARCH's coalescing group is ``(key, #writes to that key earlier
+        in the segment)``: every member of a group shares one slot — the
+        slot of the group's first member, or the open window's existing
+        coalescing point when the group has seen no segment write and the
+        window already holds one.  Writes always take fresh slots (their
+        results are arrival-order-dependent).
+
+        One stable sort by key puts each key's arrivals in arrival order;
+        a write ends its (key, epoch) run, so runs start at a key change
+        or right after a write, and a run holding searches always starts
+        with one.  Returns ``(newslot, slots, carry_keys, carry_slots)``
+        where the carry pair is each key's post-segment coalescing point
+        (slot, or -1 when a trailing write cleared it), sorted by key.
+        """
+        m = k.shape[0]
+        order = np.argsort(k, kind="stable")
+        ks = k[order]
+        ws = is_w[order]
+        newkey = np.ones(m, bool)
+        newkey[1:] = ks[1:] != ks[:-1]
+        gstart = newkey.copy()
+        gstart[1:] |= ws[:-1]
+        first_pos = np.nonzero(newkey)[0]
+        ukeys = ks[first_pos]               # sorted distinct segment keys
+        # epoch-0 runs may continue a coalescing point the open window
+        # already holds (earlier offers, or a previous chunk of this run)
+        prior_at = np.full(m, -1, np.int64)
+        prior_at[first_pos] = self._prior_slots(ukeys)
+        # fresh slots go to writes and to run-leading searches without a
+        # prior point, numbered in ARRIVAL order
+        newslot = np.empty(m, bool)
+        newslot[order] = ws | (gstart & ~ws & (prior_at < 0))
+        fresh = cur + np.cumsum(newslot) - newslot
+        fresh_sorted = fresh[order]
+        # searches inherit their run start's slot (prior or leader's
+        # fresh); writes keep their own — a write is always its run's tail
+        run_start = np.nonzero(gstart)[0]
+        start_slot = np.where(prior_at[run_start] >= 0,
+                              prior_at[run_start], fresh_sorted[run_start])
+        run_id = np.cumsum(gstart) - 1
+        slot_sorted = np.where(ws, fresh_sorted, start_slot[run_id])
+        slots = np.empty(m, np.int64)
+        slots[order] = slot_sorted
+        # per-key carry: the key's last segment op decides — a trailing
+        # SEARCH leaves its slot as the coalescing point, a write clears
+        last_pos = np.empty(m, bool)
+        last_pos[:-1] = newkey[1:]
+        last_pos[-1] = True
+        lp = np.nonzero(last_pos)[0]
+        carry = np.where(ws[lp], -1, slot_sorted[lp])
+        return newslot, slots, ukeys, carry
+
+    # -- coalescing carry (bulk <-> scalar interop) ------------------------
+
+    def _prior_slots(self, ukeys: np.ndarray) -> np.ndarray:
+        """Coalescing point per (sorted) key: lazy arrays shadow the dict,
+        -1 = none.  Vectorized so bulk admission never walks the dict
+        unless scalar offers actually populated it."""
+        if self._search_slot:
+            prior = np.fromiter(
+                (self._search_slot.get(int(kk), -1) for kk in ukeys),
+                np.int64, ukeys.shape[0])
+        else:
+            prior = np.full(ukeys.shape[0], -1, np.int64)
+        lk = self._lazy_keys
+        if lk is not None and lk.size:
+            pos = np.searchsorted(lk, ukeys)
+            pos_c = np.minimum(pos, lk.size - 1)
+            hit = lk[pos_c] == ukeys
+            prior[hit] = self._lazy_slots[pos_c[hit]]
+        return prior
+
+    def _merge_carry(self, ckeys: np.ndarray, cslots: np.ndarray):
+        """Fold a segment's per-key carry into the lazy arrays (last wins)."""
+        lk = self._lazy_keys
+        if lk is None or lk.size == 0:
+            self._lazy_keys, self._lazy_slots = ckeys, cslots
+            return
+        kcat = np.concatenate([lk, ckeys])
+        scat = np.concatenate([self._lazy_slots, cslots])
+        order = np.argsort(kcat, kind="stable")  # newer entries sort later
+        ks = kcat[order]
+        last = np.empty(ks.shape[0], bool)
+        last[:-1] = ks[1:] != ks[:-1]
+        last[-1] = True
+        self._lazy_keys = ks[last]
+        self._lazy_slots = scat[order][last]
+
+    def _sync_search_slot(self):
+        """Materialize the lazy carry into the dict before a scalar offer."""
+        d = self._search_slot
+        for kk, ss in zip(self._lazy_keys.tolist(),
+                          self._lazy_slots.tolist()):
+            if ss < 0:
+                d.pop(kk, None)
+            else:
+                d[kk] = ss
+        self._lazy_keys = self._lazy_slots = None
 
     # -- sealing -----------------------------------------------------------
 
     @property
     def pending(self) -> int:
         """Arrivals admitted into the currently-open window."""
-        return len(self._qids)
+        return self._n_arr
 
     def take(self, now: Optional[float] = None) -> Optional[Window]:
         """Seal and return the open window (None when empty).
@@ -176,28 +448,42 @@ class Collector:
         ``trigger`` records why the window closed — size, deadline, or an
         explicit flush — so metrics can attribute short batches.
         """
-        if not self._ops:
+        if not self._n_arr:
             return None
-        if len(self._ops) >= self.cfg.batch:
+        if self._n >= self._batch:
             trigger = TRIGGER_SIZE
         elif now is not None and self._expired(now):
             trigger = TRIGGER_DEADLINE
         else:
             trigger = TRIGGER_FLUSH
-        B = self.cfg.batch
-        kdt = np.dtype(self.cfg.key_dtype)
-        n = len(self._ops)
-        ops = np.full((B,), SEARCH, np.int32)
-        keys = np.full((B,), self._sent, kdt)
-        vals = np.zeros((B,), np.int32)
-        ops[:n] = self._ops
-        keys[:n] = np.asarray(self._keys, dtype=kdt)
-        vals[:n] = self._vals
+        return self._seal(trigger)
+
+    def _flush_tail(self):
+        """Close the scalar tail lists into arrival segments."""
+        if self._tail_qids:
+            self._seg_qids.append(self._tail_qids)
+            self._seg_slots.append(np.asarray(self._tail_slots, np.int32))
+            self._seg_tenq.append(np.asarray(self._tail_tenq, np.float64))
+            self._tail_qids = []
+            self._tail_slots = []
+            self._tail_tenq = []
+
+    def _seal(self, trigger: str) -> Window:
+        """Pad the slot buffers, concatenate arrival segments, hand off."""
+        n = self._n
+        ops, keys, vals = self._buf_ops, self._buf_keys, self._buf_vals
+        ops[n:] = SEARCH
+        keys[n:] = self._sent
+        vals[n:] = 0
+        self._flush_tail()
+        qids: List[int] = []
+        for seg in self._seg_qids:
+            qids.extend(seg.tolist() if isinstance(seg, np.ndarray) else seg)
         win = Window(ops=ops, keys=keys, vals=vals, occupancy=n,
-                     qids=self._qids,
-                     slots=np.asarray(self._slots, np.int32),
+                     qids=qids,
+                     slots=np.concatenate(self._seg_slots),
                      t_open=float(self._t_open),
-                     t_enq=np.asarray(self._t_enq, np.float64),
+                     t_enq=np.concatenate(self._seg_tenq),
                      trigger=trigger)
         self._reset()
         return win

@@ -41,17 +41,30 @@ import numpy as np
 
 from repro.core import distributed as dist
 from repro.core import index as pi
-from repro.pipeline.collector import Window
+from repro.pipeline.collector import Collector, Window, WindowConfig
 from repro.pipeline.metrics import PipelineMetrics
 
 
 class PendingOverflowError(RuntimeError):
-    """The index dropped net inserts: pending buffer overflowed mid-window."""
+    """The index dropped net inserts: pending buffer overflowed mid-window.
+
+    ``windows`` carries every in-flight ``Window`` at failure time — the
+    failing one first — so a caller can account for exactly which arrivals
+    never produced results.
+    """
+
+    windows: List[Window] = []
 
 
 class DispatchOverflowError(RuntimeError):
     """Sharded routing dropped queries: a fence bucket exceeded its send
-    capacity (``capacity_factor`` too small for the window's skew)."""
+    capacity (``capacity_factor`` too small for the window's skew).
+
+    ``windows`` carries every in-flight ``Window`` at failure time — the
+    failing one first (see ``PendingOverflowError``).
+    """
+
+    windows: List[Window] = []
 
 
 @jax.jit
@@ -122,11 +135,17 @@ class Dispatcher:
         self.metrics = metrics
         self._clock = clock
         self._inflight: List[_InFlight] = []
+        self._poisoned: Optional[BaseException] = None
 
     @property
     def index(self):
         """Current index state (futures included — reading it may sync)."""
         return self._index
+
+    @property
+    def poisoned(self) -> Optional[BaseException]:
+        """The latched retirement failure, if any (see ``_retire_front``)."""
+        return self._poisoned
 
     # -- execution ---------------------------------------------------------
 
@@ -152,6 +171,7 @@ class Dispatcher:
         Returns the windows retired by this call (possibly empty) so
         callers can stream results without a separate polling loop.
         """
+        self._check_poisoned()
         found, val, ovf, rebuilt, dropped = self._step(
             jnp.asarray(window.ops), jnp.asarray(window.keys),
             jnp.asarray(window.vals))
@@ -159,14 +179,80 @@ class Dispatcher:
             _InFlight(window, found, val, ovf, rebuilt, dropped))
         retired = []
         while len(self._inflight) > self.depth:
-            retired.append(self._retire(self._inflight.pop(0)))
+            retired.append(self._retire_front())
         return retired
 
     def flush(self) -> List[WindowResult]:
         """Retire every in-flight window (blocks until the device drains)."""
-        retired = [self._retire(f) for f in self._inflight]
-        self._inflight = []
+        self._check_poisoned()
+        retired = []
+        while self._inflight:
+            retired.append(self._retire_front())
         return retired
+
+    def run(self, stream, wcfg: Optional[WindowConfig] = None, *,
+            collector: Optional[Collector] = None,
+            chunk: Optional[int] = None,
+            clock=None) -> List[WindowResult]:
+        """Replay a whole arrival stream: bulk admission fused with
+        double-buffered submit.
+
+        ``stream`` is anything with 1-D ``t/ops/keys/vals`` arrays (an
+        ``ArrivalStream``); arrival i's qid is its position i.  Admission
+        goes through ``Collector.offer_many`` one ``chunk`` at a time
+        (default: one window's worth) so window formation for chunk k+1
+        overlaps the device executing chunk k — feeding the whole stream
+        to one ``offer_many`` call would serialize the two phases the
+        depth exists to overlap.  With ``clock`` given, admission times
+        are stamped from it per chunk (wall-clock saturation replay, the
+        benchmark/example mode); otherwise the stream's own virtual times
+        drive deadline splitting (deterministic, the oracle-test mode).
+        The tail window is flush-sealed and every window is retired
+        before returning, in retirement order.
+        """
+        col = collector if collector is not None else Collector(
+            wcfg if wcfg is not None else WindowConfig())
+        step = chunk or col.cfg.batch
+        n = len(stream.t)
+        qids = np.arange(n)
+        retired: List[WindowResult] = []
+        for s in range(0, n, step):
+            e = min(n, s + step)
+            t = np.full(e - s, clock()) if clock is not None \
+                else stream.t[s:e]
+            _, sealed = col.offer_many(t, stream.ops[s:e], stream.keys[s:e],
+                                       stream.vals[s:e], qids[s:e])
+            for w in sealed:
+                retired.extend(self.submit(w))
+        tail = col.take(clock()) if clock is not None else col.take()
+        if tail is not None:
+            retired.extend(self.submit(tail))
+        retired.extend(self.flush())
+        return retired
+
+    def _check_poisoned(self):
+        if self._poisoned is not None:
+            raise self._poisoned
+
+    def _retire_front(self) -> WindowResult:
+        """Retire the oldest in-flight window; latch any data-loss error.
+
+        A failed retirement means the index state already reflects an
+        execute that lost queries — every later window was dispatched
+        against that corrupted state, so silently continuing would
+        propagate the loss.  The failure poisons the dispatcher (further
+        ``submit``/``flush`` re-raise it), the failing window stays
+        in-flight, and the exception's ``windows`` lists it plus every
+        window queued behind it, so the caller can replay them elsewhere.
+        """
+        try:
+            res = self._retire(self._inflight[0])
+        except (PendingOverflowError, DispatchOverflowError) as e:
+            e.windows = [f.window for f in self._inflight]
+            self._poisoned = e
+            raise
+        self._inflight.pop(0)
+        return res
 
     def _retire(self, infl: _InFlight) -> WindowResult:
         found = np.asarray(infl.found)   # blocks on the device here

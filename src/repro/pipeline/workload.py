@@ -62,6 +62,14 @@ class ArrivalConfig:
             raise ValueError(
                 f"unknown arrival process {self.process!r}; "
                 f"pick one of {PROCESSES}")
+        if self.hot_keys < 1:
+            raise ValueError(
+                f"hot_keys must be >= 1, got {self.hot_keys}")
+        # a fraction: out-of-range values are intent ("everything hot" /
+        # "nothing hot"), not errors — clamp instead of raising
+        if not 0.0 <= self.hot_frac <= 1.0:
+            object.__setattr__(self, "hot_frac",
+                               min(1.0, max(0.0, self.hot_frac)))
 
 
 @dataclasses.dataclass
@@ -138,6 +146,11 @@ def make_arrivals(acfg: ArrivalConfig, ycfg: data_mod.YCSBConfig,
         dataclasses.replace(ycfg, batch=n), np.asarray(keys),
         step=acfg.seed)
     if acfg.process == "hotkey":
+        if acfg.hot_keys > len(keys):
+            raise ValueError(
+                f"hotkey process needs hot_keys <= len(keys): asked for a "
+                f"hot set of {acfg.hot_keys} distinct keys but the dataset "
+                f"has only {len(keys)}")
         rng = np.random.default_rng((acfg.seed, 0x1407))
         hot = rng.choice(np.asarray(keys), size=acfg.hot_keys, replace=False)
         mask = rng.random(n) < acfg.hot_frac

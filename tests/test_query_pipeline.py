@@ -183,6 +183,190 @@ def test_sharded_dispatch_requires_mesh():
 
 
 # ---------------------------------------------------------------------------
+# bulk admission (offer_many): windows must be bit-identical to the offer loop
+# ---------------------------------------------------------------------------
+
+def windows_sequential(col, t, ops, keys, vals):
+    """The driver loop offer_many is defined against; list of sealed
+    windows (the residual open window stays in the collector)."""
+    wins = []
+    for i in range(len(ops)):
+        while not col.offer(float(t[i]), int(ops[i]), int(keys[i]),
+                            int(vals[i]), i):
+            wins.append(col.take(float(t[i])))
+    return wins
+
+
+def assert_window_identical(a, b):
+    assert a.trigger == b.trigger
+    assert a.occupancy == b.occupancy
+    assert a.ops.dtype == b.ops.dtype and np.array_equal(a.ops, b.ops)
+    assert a.keys.dtype == b.keys.dtype and np.array_equal(a.keys, b.keys)
+    assert a.vals.dtype == b.vals.dtype and np.array_equal(a.vals, b.vals)
+    assert a.qids == b.qids
+    assert a.slots.dtype == b.slots.dtype and np.array_equal(a.slots, b.slots)
+    assert a.t_open == b.t_open
+    assert np.array_equal(a.t_enq, b.t_enq)
+
+
+def bulk_stream(n, key_space, write_ratio, seed, gap_choices):
+    rng = np.random.default_rng(seed)
+    ops = np.where(rng.random(n) < write_ratio,
+                   rng.integers(1, 3, n), 0).astype(np.int32)
+    keys = rng.integers(0, key_space, n).astype(np.int32)
+    vals = rng.integers(0, 1000, n).astype(np.int32)
+    t = np.cumsum(rng.choice(gap_choices, n))
+    return t, ops, keys, vals
+
+
+@pytest.mark.parametrize("coalesce", [False, True])
+@pytest.mark.parametrize("deadline", [np.inf, 0.5])
+@pytest.mark.parametrize("write_ratio", [0.0, 0.4])
+@pytest.mark.parametrize("key_space", [3, 500])
+def test_offer_many_equivalent_to_offer_loop(coalesce, deadline,
+                                             write_ratio, key_space):
+    """Bulk ≡ sequential across coalescing × deadline splits × op mixes,
+    for whole-run, chunked, and scalar-interleaved admission."""
+    t, ops, keys, vals = bulk_stream(500, key_space, write_ratio, seed=11,
+                                     gap_choices=[0.0, 0.01, 1.0])
+    cfg = WindowConfig(batch=32, deadline=deadline, coalesce=coalesce)
+    qids = np.arange(len(ops))
+
+    ref_col = Collector(cfg)
+    ref_wins = windows_sequential(ref_col, t, ops, keys, vals)
+    # a read-only few-key coalescing stream with no deadline legitimately
+    # never seals (3 slots serve everything) — the residual-window compare
+    # below still exercises equivalence there
+    if not (coalesce and write_ratio == 0.0 and key_space == 3
+            and deadline == np.inf):
+        assert ref_wins, "stream too tame: no window ever sealed"
+
+    # whole run in one call
+    col = Collector(cfg)
+    n_adm, wins = col.offer_many(t, ops, keys, vals, qids)
+    assert n_adm == len(ops)
+    assert len(wins) == len(ref_wins)
+    for a, b in zip(ref_wins, wins):
+        assert_window_identical(a, b)
+
+    # chunked calls (residual open-window state carried between calls)
+    col2 = Collector(cfg)
+    wins2 = []
+    for s in range(0, len(ops), 13):
+        e = min(len(ops), s + 13)
+        _, ws = col2.offer_many(t[s:e], ops[s:e], keys[s:e], vals[s:e],
+                                qids[s:e])
+        wins2 += ws
+    for a, b in zip(ref_wins, wins2):
+        assert_window_identical(a, b)
+
+    # scalar offers interleaved after a bulk prefix (lazy carry sync)
+    col3 = Collector(cfg)
+    half = len(ops) // 2
+    _, wins3 = col3.offer_many(t[:half], ops[:half], keys[:half],
+                               vals[:half], qids[:half])
+    wins3 = list(wins3)
+    for i in range(half, len(ops)):
+        while not col3.offer(float(t[i]), int(ops[i]), int(keys[i]),
+                             int(vals[i]), i):
+            wins3.append(col3.take(float(t[i])))
+    for a, b in zip(ref_wins, wins3):
+        assert_window_identical(a, b)
+
+    # identical residual windows too
+    tails = [c.take() for c in (ref_col, col, col2, col3)]
+    assert all((x is None) == (tails[0] is None) for x in tails)
+    if tails[0] is not None:
+        for x in tails[1:]:
+            assert_window_identical(tails[0], x)
+
+
+def test_offer_many_oracle_replay_through_dispatcher_run():
+    """Dispatcher.run (bulk admission + double-buffered submit) == oracle."""
+    cfg = PIConfig(capacity=256, pending_capacity=128, fanout=4)
+    idx, ref = seeded_index(cfg)
+    t, ops, keys, vals = make_stream()
+    disp = Dispatcher(idx, depth=2, clock=lambda: 0.0)
+
+    class _Stream:
+        pass
+
+    stream = _Stream()
+    stream.t, stream.ops, stream.keys, stream.vals = t, ops, keys, vals
+    results = {}
+    for res in disp.run(stream, WindowConfig(batch=32, deadline=5.0,
+                                             coalesce=True)):
+        results.update(res.per_arrival())
+    check_against_oracle(results, ref.execute(ops, keys, vals), ops)
+    assert final_pairs(disp.index) == ref.data
+
+
+def test_offer_many_matches_scalar_replay_results():
+    """Same per-query results whether the harness admits one arrival at a
+    time or in bulk chunks (replay-level equivalence, depth 1)."""
+    cfg = PIConfig(capacity=256, pending_capacity=128, fanout=4)
+    t, ops, keys, vals = make_stream(seed=9)
+    outs = []
+    for bulk in (False, True):
+        idx, _ = seeded_index(cfg)
+        col = Collector(WindowConfig(batch=32, deadline=5.0))
+        disp = Dispatcher(idx, depth=1, clock=lambda: 0.0)
+        if bulk:
+            results = {}
+            qids = np.arange(len(ops))
+            for s in range(0, len(ops), 50):
+                e = min(len(ops), s + 50)
+                _, wins = col.offer_many(t[s:e], ops[s:e], keys[s:e],
+                                         vals[s:e], qids[s:e])
+                for w in wins:
+                    for r in disp.submit(w):
+                        results.update(r.per_arrival())
+            tail = col.take()
+            if tail is not None:
+                for r in disp.submit(tail):
+                    results.update(r.per_arrival())
+            for r in disp.flush():
+                results.update(r.per_arrival())
+        else:
+            results = replay_stream(disp, col, t, ops, keys, vals)
+        outs.append((results, final_pairs(disp.index)))
+    assert outs[0] == outs[1]
+
+
+def test_offer_many_atomic_on_sentinel():
+    """A raising offer_many admits nothing — not even the valid prefix."""
+    col = Collector(WindowConfig(batch=8, deadline=1.0))
+    assert col.offer(0.0, SEARCH, 5, 0, 0)
+    sent = np.iinfo(np.int32).max
+    t = np.array([0.1, 0.2, 0.3])
+    keys = np.array([7, sent, 9], np.int32)
+    zeros = np.zeros(3, np.int32)
+    with pytest.raises(ValueError, match="sentinel"):
+        col.offer_many(t, zeros, keys, zeros, np.arange(3))
+    assert col.pending == 1  # only the pre-existing arrival
+    w = col.take()
+    assert w.occupancy == 1 and w.qids == [0]
+
+
+def test_offer_many_rejects_bad_shapes_and_times():
+    col = Collector(WindowConfig(batch=8))
+    zeros = np.zeros(3, np.int32)
+    with pytest.raises(ValueError, match="shape"):
+        col.offer_many(np.zeros(2), zeros, zeros, zeros, np.arange(3))
+    with pytest.raises(ValueError, match="nondecreasing"):
+        col.offer_many(np.array([1.0, 0.5, 2.0]), zeros, zeros, zeros,
+                       np.arange(3))
+    assert col.pending == 0
+
+
+def test_offer_many_empty_run_is_noop():
+    col = Collector(WindowConfig(batch=8))
+    e = np.array([], np.int32)
+    assert col.offer_many(np.array([], np.float64), e, e, e, e) == (0, [])
+    assert col.pending == 0 and col.take() is None
+
+
+# ---------------------------------------------------------------------------
 # collector policy
 # ---------------------------------------------------------------------------
 
@@ -233,6 +417,26 @@ def test_collector_rejects_sentinel_key():
         col.offer(0.0, SEARCH, np.iinfo(np.int32).max, 0, 0)
 
 
+def test_rejected_sentinel_leaves_no_stale_deadline():
+    """Regression: offer used to set _t_open before validating the key, so
+    a rejected sentinel arrival on an empty window left a stale open
+    timestamp and the next real window could seal short on a phantom
+    deadline expiry."""
+    col = Collector(WindowConfig(batch=8, deadline=1.0))
+    with pytest.raises(ValueError, match="sentinel"):
+        col.offer(0.0, SEARCH, np.iinfo(np.int32).max, 0, 0)
+    # collector unchanged: nothing admitted, no open window
+    assert col.pending == 0
+    assert col.take() is None
+    # a real window opening much later must NOT be expired by the ghost
+    assert col.offer(100.0, SEARCH, 1, 0, 0)
+    assert col.offer(100.5, SEARCH, 2, 0, 1), \
+        "phantom deadline expiry from the rejected arrival's timestamp"
+    assert col.pending == 2
+    w = col.take()
+    assert w.occupancy == 2 and w.t_open == 100.0
+
+
 def test_collector_empty_take_is_none():
     assert Collector(WindowConfig(batch=4)).take() is None
 
@@ -264,6 +468,45 @@ def test_dispatcher_overflow_check_is_optional():
     disp = Dispatcher(idx, depth=0, check_overflow=False)
     (res,) = disp.submit(window)  # policy off: no raise, results delivered
     assert res.found.shape == (32,)
+
+
+def test_failed_retirement_poisons_dispatcher():
+    """Regression: a retirement failure used to pop and lose the failing
+    window while the index already reflected the lossy execute — a caller
+    catching the error could keep submitting on corrupted state.  Now the
+    failure is latched, the undrained windows ride on the exception, and
+    further submit/flush re-raise."""
+    idx, window = _overflowing_window_setup()
+    disp = Dispatcher(idx, depth=0)
+    with pytest.raises(PendingOverflowError) as exc:
+        disp.submit(window)
+    # the failing window is surfaced, not lost
+    assert exc.value.windows == [window]
+    assert disp.poisoned is exc.value
+    # the dispatcher refuses to continue on corrupted state
+    col = Collector(WindowConfig(batch=32))
+    assert col.offer(0.0, SEARCH, 5, 0, 0)
+    with pytest.raises(PendingOverflowError):
+        disp.submit(col.take())
+    with pytest.raises(PendingOverflowError):
+        disp.flush()
+
+
+def test_poisoned_flush_surfaces_all_inflight_windows():
+    """With depth > 0 the failure appears at flush; every queued window —
+    failing one first — must ride on the exception."""
+    idx, window = _overflowing_window_setup()
+    disp = Dispatcher(idx, depth=2)
+    assert disp.submit(window) == []      # queued, not yet retired
+    col = Collector(WindowConfig(batch=32))
+    assert col.offer(0.0, SEARCH, 200, 0, 0)
+    second = col.take()
+    assert disp.submit(second) == []
+    with pytest.raises(PendingOverflowError) as exc:
+        disp.flush()
+    assert exc.value.windows == [window, second]
+    with pytest.raises(PendingOverflowError):
+        disp.flush()
 
 
 # ---------------------------------------------------------------------------
@@ -298,6 +541,28 @@ def test_hotkey_stream_is_adversarially_skewed():
 def test_unknown_process_rejected():
     with pytest.raises(ValueError, match="unknown arrival process"):
         ArrivalConfig(process="flat")
+
+
+def test_hotkey_hot_set_larger_than_dataset_rejected():
+    """Regression: hot_keys > len(keys) used to crash inside rng.choice
+    with an opaque numpy error; it must be a clear config error."""
+    keys = np.arange(8, dtype=np.int32)
+    acfg = ArrivalConfig(process="hotkey", n_arrivals=64, hot_keys=9)
+    with pytest.raises(ValueError, match="hot_keys <= len"):
+        make_arrivals(acfg, data_mod.YCSBConfig(), keys)
+
+
+def test_hot_frac_is_clamped():
+    assert ArrivalConfig(process="hotkey", hot_frac=1.5).hot_frac == 1.0
+    assert ArrivalConfig(process="hotkey", hot_frac=-0.2).hot_frac == 0.0
+    with pytest.raises(ValueError, match="hot_keys"):
+        ArrivalConfig(process="hotkey", hot_keys=0)
+    # clamped to "everything hot": the whole stream hits the hot set
+    keys = np.arange(1000, dtype=np.int32)
+    acfg = ArrivalConfig(process="hotkey", n_arrivals=512, hot_keys=2,
+                         hot_frac=2.0)
+    stream = make_arrivals(acfg, data_mod.YCSBConfig(), keys)
+    assert len(np.unique(stream.keys)) <= 2
 
 
 # ---------------------------------------------------------------------------
