@@ -38,5 +38,20 @@ assert adm and adm["offer_many"] > adm["offer"], \
 print(f"pipeline smoke ok in {time.time() - t0:.1f}s: "
       f"admission {adm['offer_many'] / adm['offer']:.1f}x")
 EOF
+
+  echo "--- segmented rebuild smoke (fig_rebuild, tiny sizes) ---"
+  BENCH_DIR="$(mktemp -d)" python - <<'EOF'
+import time
+from benchmarks.fig_rebuild import main
+
+t0 = time.time()
+rows = main(n_keys=1 << 12, churns=(0.02, 0.25), iters=3)
+modes = {r[0]: r[2] for r in rows}
+assert modes[0.02] == "incremental", \
+    f"localized 2% churn should take the incremental tier: {rows}"
+assert modes[0.25] == "repack", \
+    f"wide 25% churn should fall back to the repack tier: {rows}"
+print(f"rebuild smoke ok in {time.time() - t0:.1f}s: {modes}")
+EOF
 fi
 echo "check.sh: all green"

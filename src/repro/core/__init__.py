@@ -12,9 +12,9 @@ from repro.core.batch import SEARCH, INSERT, DELETE
 from repro.core.engine import BACKENDS, Probe, SearchEngine, get_engine
 from repro.core.index import (
     PIConfig, PIIndex, build, empty, execute, execute_impl,
-    execute_trace_count, lookup, traverse,
+    execute_trace_count, incremental_fits, live_items, lookup, traverse,
     rebuild, maybe_rebuild, needs_rebuild, range_agg, search_batch,
-    insert_batch, delete_batch, with_backend,
+    insert_batch, delete_batch, validate_layout, with_backend,
 )
 from repro.core.distributed import (
     ShardedPIIndex, build_sharded, execute_sharded, make_sharded_executor,
@@ -28,9 +28,10 @@ from repro.core.ref import RefIndex
 
 __all__ = [
     "SEARCH", "INSERT", "DELETE", "PIConfig", "PIIndex", "build", "empty",
-    "execute", "execute_impl", "execute_trace_count", "lookup", "traverse",
+    "execute", "execute_impl", "execute_trace_count", "incremental_fits",
+    "live_items", "lookup", "traverse",
     "rebuild", "maybe_rebuild", "needs_rebuild", "range_agg", "search_batch",
-    "insert_batch", "delete_batch", "with_backend",
+    "insert_batch", "delete_batch", "validate_layout", "with_backend",
     "SearchEngine", "get_engine", "Probe", "BACKENDS",
     "ShardedPIIndex", "build_sharded",
     "execute_sharded", "make_sharded_executor", "rebuild_sharded",

@@ -258,18 +258,32 @@ def rebuild_sharded(state: ShardedPIIndex) -> ShardedPIIndex:
 
 @jax.jit
 def maybe_rebuild_shards(shards: pi.PIIndex):
-    """Branchless daemon on stacked shard leaves: rebuild all iff any due.
+    """Per-shard dirty-tracked daemon on stacked shard leaves.
 
-    All-or-none keeps a single cond (vs per-shard conds with mismatched
-    pytrees); rebuilds of not-yet-due shards are semantics-preserving and
-    amortized, exactly like the paper's periodic daemon sweep.  Returns
-    ``(shards, any_overflow, rebuilt)`` — the overflow flag is snapshot
-    *before* the rebuild resets it on the state (overflow is data loss
-    and must stay observable).
+    A single cond gates the whole sweep (no dispatch when nothing is
+    due), but inside it each shard keeps its own state unless *it* is
+    due: a not-due shard's pending churn stays buffered for its own later
+    — likely incremental — rebuild instead of being force-repacked
+    whenever a sibling trips the threshold.  (Under vmap the inner
+    two-tier ``pi.rebuild`` cond lowers to a select, so every shard pays
+    one rebuild's FLOPs during a sweep; the win is that *sweeps* are per
+    -shard-due now, not all-or-none, and each shard's rebuild is
+    churn-proportional.)  Returns ``(shards, any_overflow, any_due)`` —
+    the overflow flag is snapshot *before* the rebuild resets it on the
+    state (overflow is data loss and must stay observable).
     """
     ovf = jnp.any(shards.overflow)
-    due = jnp.any(jax.vmap(pi.needs_rebuild)(shards))
-    shards = jax.lax.cond(due, jax.vmap(pi.rebuild), lambda s: s, shards)
+    due_each = jax.vmap(pi.needs_rebuild)(shards)
+    due = jnp.any(due_each)
+
+    def sweep(s):
+        rebuilt = jax.vmap(pi.rebuild)(s)
+        def sel(a, b):
+            m = due_each.reshape((-1,) + (1,) * (a.ndim - 1))
+            return jnp.where(m, a, b)
+        return jax.tree.map(sel, rebuilt, s)
+
+    shards = jax.lax.cond(due, sweep, lambda s: s, shards)
     return shards, ovf, due
 
 
@@ -281,18 +295,17 @@ def maybe_rebuild_sharded(state: ShardedPIIndex) -> ShardedPIIndex:
 
 
 def collect_pairs(state: ShardedPIIndex):
-    """Host-side: pull all live (key, val) pairs (for resharding/tests)."""
+    """Host-side: pull all live (key, val) pairs (for resharding/tests).
+
+    Occupancy is ``key != sentinel`` per slot — the segmented gapped
+    storage has no dense ``[:n]`` prefix to slice.
+    """
     ks, vs = [], []
     for s in range(state.n_shards):
-        shard = jax.tree.map(lambda x: np.asarray(x[s]), state.shards)
-        n = int(shard.n)
-        live = ~shard.tomb[:n]
-        ks.append(shard.keys[:n][live])
-        vs.append(shard.vals[:n][live])
-        pn = int(shard.pn)
-        plive = ~shard.ptomb[:pn]
-        ks.append(shard.pkeys[:pn][plive])
-        vs.append(shard.pvals[:pn][plive])
+        shard = jax.tree.map(lambda x: x[s], state.shards)
+        k, v = pi.live_items(shard)
+        ks.append(k)
+        vs.append(v)
     k = np.concatenate(ks)
     v = np.concatenate(vs)
     order = np.argsort(k)

@@ -27,6 +27,15 @@ bit-identical by construction and testable against ``core.ref.RefIndex``.
 Liveness (tombstones, ``pn`` high-water mark) is intentionally *not* the
 engine's business — those are cheap gathers the caller applies on top, and
 keeping them out lets one kernel serve lookups, executes and range scans.
+
+Segmented gapped storage (core.index module docstring, invariants L1-L5):
+the descent runs UNCHANGED on the gapped layout.  Within a segment each
+F-key child group is an ascending run prefix + KSENT slack, and KSENT
+sorts after every real key, so the rank popcount still lands on the floor
+slot; because ``W`` is a power of the fanout, a child group either lies
+inside one segment or is a whole number of segments, so no group ever
+straddles a partially-filled segment out of order.  Positions are gapped
+*slot* indices (monotone in the key, not dense ranks).
 """
 from __future__ import annotations
 

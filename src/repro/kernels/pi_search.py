@@ -30,6 +30,15 @@ future-work optimization (§7).  For larger C the top levels stay VMEM-
 resident and only the bottom level streams.  The pending buffer (PC keys,
 power-of-two padded) rides in the same launch as one more broadcast block.
 
+Gapped storage: ``core.index`` stores the storage layer as fixed-width
+segments of sorted runs with KSENT slack tails (invariants L1-L5 there).
+The branchless descent and lower bound below are correct on that layout
+with NO kernel change: KSENT is the dtype max, so slack compares as
+"greater than any query", and a segment's run+slack is exactly the sorted
+-with-padding shape these kernels already assume per child group.  The
+only semantic shift is that returned positions are gapped slot indices,
+not dense ranks.
+
 The kernels are validated in interpret mode on CPU (this container has no
 TPU); the BlockSpec tiling below is the real TPU launch geometry.
 """

@@ -77,12 +77,22 @@ def _step_single(index, ops, keys, vals):
     into synchronous dispatch, which serializes host formation with device
     execution — the exact overlap double-buffering exists to create.  The
     price is one transient extra copy of the index state in memory.
+
+    ``incr`` reports which tier a due rebuild took (the segmented
+    incremental merge vs the full repack) so the pipeline metrics can
+    attribute rebuild cost to churn, not capacity.  The tier probe lives
+    inside the due-branch so windows that don't rebuild (the vast
+    majority) pay nothing for it.
     """
     new_index, (found, val) = pi.execute_impl(index, ops, keys, vals)
     ovf = new_index.overflow
     due = pi.needs_rebuild(new_index)
-    new_index = jax.lax.cond(due, pi.rebuild, lambda i: i, new_index)
-    return new_index, found, val, ovf, due
+    new_index, incr = jax.lax.cond(
+        due,
+        lambda i: (pi.rebuild(i), pi.incremental_fits(i) & ~i.overflow),
+        lambda i: (i, jnp.array(False)),
+        new_index)
+    return new_index, found, val, ovf, due, incr
 
 
 @dataclasses.dataclass
@@ -94,6 +104,7 @@ class WindowResult:
     val: np.ndarray        # (batch,) int32
     t_retired: float
     rebuilt: bool
+    rebuilt_incremental: bool = False  # rebuild took the segmented fast tier
 
     def per_arrival(self) -> Dict[int, Tuple[bool, int]]:
         """qid → (found, val), fanning shared slots back out to arrivals."""
@@ -114,6 +125,7 @@ class _InFlight:
     val: jnp.ndarray
     overflow: jnp.ndarray  # snapshot scalar, taken before the rebuild reset
     rebuilt: jnp.ndarray
+    incr: Optional[jnp.ndarray]     # rebuild tier taken (None: sharded path)
     dropped: Optional[jnp.ndarray]  # sharded routing drops (None: local)
 
 
@@ -150,7 +162,8 @@ class Dispatcher:
     # -- execution ---------------------------------------------------------
 
     def _step(self, ops, keys, vals):
-        """One execute + rebuild-if-due → (found, val, ovf, rebuilt, drop)."""
+        """One execute + rebuild-if-due → (found, val, ovf, rebuilt, incr,
+        drop)."""
         if isinstance(self._index, dist.ShardedPIIndex):
             state, (found, val), _, dropped = dist.execute_sharded(
                 self._index, self._mesh, ops, keys, vals,
@@ -158,12 +171,13 @@ class Dispatcher:
             shards, ovf, rebuilt = dist.maybe_rebuild_shards(state.shards)
             self._index = dist.ShardedPIIndex(
                 shards=shards, fences=state.fences, n_shards=state.n_shards)
+            incr = None
             dropped = jnp.sum(dropped)
         else:
-            self._index, found, val, ovf, rebuilt = _step_single(
+            self._index, found, val, ovf, rebuilt, incr = _step_single(
                 self._index, ops, keys, vals)
             dropped = None
-        return found, val, ovf, rebuilt, dropped
+        return found, val, ovf, rebuilt, incr, dropped
 
     def submit(self, window: Window) -> List[WindowResult]:
         """Dispatch a sealed window; retire whatever exceeds the depth.
@@ -172,11 +186,11 @@ class Dispatcher:
         callers can stream results without a separate polling loop.
         """
         self._check_poisoned()
-        found, val, ovf, rebuilt, dropped = self._step(
+        found, val, ovf, rebuilt, incr, dropped = self._step(
             jnp.asarray(window.ops), jnp.asarray(window.keys),
             jnp.asarray(window.vals))
         self._inflight.append(
-            _InFlight(window, found, val, ovf, rebuilt, dropped))
+            _InFlight(window, found, val, ovf, rebuilt, incr, dropped))
         retired = []
         while len(self._inflight) > self.depth:
             retired.append(self._retire_front())
@@ -270,7 +284,9 @@ class Dispatcher:
                 f"({self.capacity_factor}) or rebalance the fences.")
         res = WindowResult(window=infl.window, found=found, val=val,
                            t_retired=self._clock(),
-                           rebuilt=bool(infl.rebuilt))
+                           rebuilt=bool(infl.rebuilt),
+                           rebuilt_incremental=(
+                               infl.incr is not None and bool(infl.incr)))
         if self.metrics is not None:
             self.metrics.on_retire(res)
         return res

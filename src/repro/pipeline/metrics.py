@@ -66,6 +66,7 @@ class PipelineMetrics:
     n_arrivals: int = 0
     n_slots: int = 0            # distinct executed queries (post-coalescing)
     n_rebuilds: int = 0
+    n_rebuilds_incremental: int = 0  # rebuilds that took the segmented tier
     occupancy_sum: int = 0
     triggers: Dict[str, int] = dataclasses.field(default_factory=dict)
     t_start: Optional[float] = None
@@ -85,6 +86,8 @@ class PipelineMetrics:
         self.n_slots += w.occupancy
         self.occupancy_sum += w.occupancy
         self.n_rebuilds += int(res.rebuilt)
+        self.n_rebuilds_incremental += int(
+            getattr(res, "rebuilt_incremental", False))
         self.triggers[w.trigger] = self.triggers.get(w.trigger, 0) + 1
         self.hist.record(res.latencies())
 
@@ -107,6 +110,7 @@ class PipelineMetrics:
             "coalesced": coalesced,
             "mean_occupancy": occ,
             "rebuilds": self.n_rebuilds,
+            "rebuilds_incremental": self.n_rebuilds_incremental,
             "triggers": dict(self.triggers),
             "qps": (self.n_arrivals / wall) if wall else None,
             "p50_ms": self.hist.percentile(50) * 1e3,

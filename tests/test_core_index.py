@@ -39,12 +39,20 @@ def check_batch(idx, ref, ops, ks, vs):
 
 
 def test_traverse_is_floor(rng):
+    """traverse returns the *slot* holding the floor key (gapped layout:
+    slot indices are not dense ranks, so compare by value)."""
     idx, _, keys = mk(rng)
     q = rng.integers(-5, 11_000, size=128).astype(np.int32)
     pos = np.asarray(traverse(idx, jnp.asarray(q)))
     sk = np.sort(keys)
-    want = np.searchsorted(sk, q, side="right") - 1
-    assert np.array_equal(pos, want)
+    rank = np.searchsorted(sk, q, side="right") - 1
+    slots = np.asarray(idx.keys)
+    assert np.array_equal(pos < 0, rank < 0)
+    got = slots[np.maximum(pos, 0)]
+    want = sk[np.maximum(rank, 0)]
+    assert np.array_equal(got[rank >= 0], want[rank >= 0])
+    # slots are monotone in the query key even with gaps
+    assert np.all(np.diff(pos[np.argsort(q, kind="stable")]) >= 0)
 
 
 def test_lookup_matches_oracle(rng):
