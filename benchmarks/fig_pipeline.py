@@ -16,12 +16,15 @@ percentiles, and the pipelined/naive qps speedup.  A separate
 ``admission`` block isolates the host-side window-formation cost: the
 same uniform stream admitted through the scalar ``offer`` loop vs
 vectorized ``offer_many`` (no dispatch), whose ratio is the lifted
-admission ceiling.  ``BENCH_pipeline.json`` carries the same rows for
-the perf trajectory.
+admission ceiling.  A ``durability`` block measures the WAL tax: the
+pipelined replay with the admission-point WAL off vs on under each
+fsync policy (``config.durability_tax`` records the qps ratios).
+``BENCH_pipeline.json`` carries the same rows for the perf trajectory.
 """
 from __future__ import annotations
 
 import dataclasses
+import tempfile
 import time
 
 import jax
@@ -30,7 +33,7 @@ import numpy as np
 
 from benchmarks.common import emit, make_index, replay_stream
 from repro import data as data_mod
-from repro.pipeline import (ArrivalConfig, Collector, Dispatcher,
+from repro.pipeline import (ArrivalConfig, Collector, Dispatcher, Durability,
                             PipelineMetrics, WindowConfig, make_arrivals)
 
 
@@ -106,6 +109,66 @@ def admission_bench(batch: int, n_arrivals: int, n_keys: int,
     return rows, round(speedup, 3)
 
 
+def durability_bench(n_keys: int, batch: int, n_arrivals: int,
+                     backend=None):
+    """Durability tax: the pipelined replay with the WAL off vs on, per
+    fsync policy.
+
+    ``Durability`` is constructed outside the timed region (the initial
+    blocking snapshot is a one-time cost, not a per-window tax) and
+    ``snapshot_every=0``, so the measured delta is exactly the
+    admission-point WAL: one encode+append per sealed window plus
+    whatever the fsync policy adds.  The acceptance bar lives in
+    ``config.durability_tax``: ``off`` must stay within ~10% of the
+    WAL-off qps.
+    """
+    idx, keys, ycfg = make_index(n_keys, backend=backend)
+    stream = make_arrivals(ArrivalConfig(n_arrivals=n_arrivals), ycfg, keys)
+    fresh = lambda: jax.tree.map(jnp.copy, idx)
+    wcfg = WindowConfig(batch=batch)
+    now = time.perf_counter
+    # warm the compiled executable once; every policy reuses it
+    warm = make_arrivals(ArrivalConfig(n_arrivals=2 * batch, seed=7),
+                         ycfg, keys)
+    Dispatcher(fresh(), depth=1).run(warm, wcfg, clock=now)
+
+    def one_run(policy: str):
+        mets = PipelineMetrics()
+        state = fresh()
+        if policy == "wal_off":
+            dur, col = None, Collector(wcfg)
+            tmp = None
+        else:
+            tmp = tempfile.TemporaryDirectory()
+            dur = Durability(tmp.name, state, fsync=policy,
+                             snapshot_every=0, metrics=mets)
+            col = Collector(wcfg, on_seal=dur.on_seal)
+        disp = Dispatcher(state, depth=1, metrics=mets, durability=dur)
+        mets.start(now())
+        replay_stream(disp, col, stream, clock=now)
+        mets.stop(now())
+        if dur is not None:
+            dur.close()
+        if tmp is not None:
+            tmp.cleanup()
+        return mets.summary()
+
+    rows, qps = [], {}
+    for policy in ("wal_off", "off", "interval", "per_window"):
+        s = max((one_run(policy) for _ in range(3)),
+                key=lambda s: s["qps"])
+        qps[policy] = s["qps"]
+        rows.append(("durability", "poisson", 0.0, policy,
+                     round(s["qps"]), round(s["p50_ms"], 3),
+                     round(s["p99_ms"], 3), s["windows"],
+                     round(s["mean_occupancy"]), s["coalesced"]))
+    tax = {p: round(qps[p] / qps["wal_off"], 3)
+           for p in ("off", "interval", "per_window")}
+    print(f"[pipeline] durability tax (qps vs WAL-off): "
+          + ", ".join(f"{p}={r:.3f}" for p, r in tax.items()))
+    return rows, tax
+
+
 def one_scenario(process: str, theta: float, n_keys: int, batch: int,
                  n_arrivals: int, backend=None):
     idx, keys, ycfg = make_index(n_keys, backend=backend)
@@ -159,6 +222,9 @@ def main(n_keys=1 << 18, batch=8192, n_arrivals=1 << 16,
     admission_rows, admission_speedup = admission_bench(
         batch, n_arrivals, n_keys)
     rows += admission_rows
+    durability_rows, durability_tax = durability_bench(
+        n_keys, batch, n_arrivals)
+    rows += durability_rows
     return emit(rows, ("fig", "process", "theta", "mode", "qps", "p50_ms",
                        "p99_ms", "windows", "occupancy", "coalesced"),
                 fig="pipeline",
@@ -166,7 +232,8 @@ def main(n_keys=1 << 18, batch=8192, n_arrivals=1 << 16,
                         "n_arrivals": n_arrivals, "depth": 1,
                         "write_ratio": 0.0, "speedup": speedups,
                         "speedup_geomean": geomean,
-                        "admission_speedup": admission_speedup})
+                        "admission_speedup": admission_speedup,
+                        "durability_tax": durability_tax})
 
 
 if __name__ == "__main__":

@@ -9,7 +9,8 @@ Design (multi-host ready, exercised single-host here):
   * restore places arrays with the *target* sharding — the mesh at restore
     time may differ from the mesh at save time (elastic restart)
   * saves run on a background thread (training continues; ``wait()`` joins
-    before the next save or at exit)
+    before the next save or at exit); a failed background write re-raises
+    from the next ``wait()`` instead of vanishing with the thread
 """
 from __future__ import annotations
 
@@ -23,6 +24,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.faults import faultpoint
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -35,6 +38,7 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._exc: Optional[BaseException] = None
 
     # -- save ---------------------------------------------------------------
     def save(self, step: int, tree: Any, blocking: bool = False,
@@ -51,6 +55,7 @@ class CheckpointManager:
             os.makedirs(tmp, exist_ok=True)
             np.savez(os.path.join(tmp, "host0.npz"),
                      **{f"leaf_{i}": a for i, a in enumerate(host_leaves)})
+            faultpoint("ckpt.mid_write")     # arrays down, no manifest yet
             manifest = {"step": step, "n_leaves": len(host_leaves),
                         "time": time.time(), "meta": meta or {},
                         "complete": True}
@@ -58,19 +63,36 @@ class CheckpointManager:
                 json.dump(manifest, f)
             if os.path.exists(final):
                 shutil.rmtree(final)
+            faultpoint("ckpt.pre_rename")    # complete .tmp, unpublished
             os.rename(tmp, final)            # atomic publish
             self._gc()
+
+        def _write_captured():
+            try:
+                _write()
+            except BaseException as e:       # re-raised from wait()
+                self._exc = e
 
         if blocking:
             _write()
         else:
-            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread = threading.Thread(target=_write_captured,
+                                            daemon=True)
             self._thread.start()
 
     def wait(self):
+        """Join the in-flight save; re-raise its failure, if any.
+
+        A background save that died (disk full, crash injection, ...)
+        must not be mistaken for a published checkpoint — the exception
+        is latched and surfaces here, once, instead of dying silently
+        with the daemon thread."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
 
     def _gc(self):
         steps = self.all_steps()
@@ -111,13 +133,15 @@ class CheckpointManager:
             if tuple(want.shape) != tuple(got.shape):
                 raise ValueError(
                     f"checkpoint shape {got.shape} != target {want.shape}")
+            if np.dtype(got.dtype) != np.dtype(want.dtype):
+                raise ValueError(
+                    f"checkpoint dtype {got.dtype} != target {want.dtype}")
         if shardings is not None:
             sh_leaves = treedef.flatten_up_to(shardings)
-            placed = [jax.device_put(a.astype(w.dtype), s)
-                      for a, w, s in zip(loaded, leaves, sh_leaves)]
+            placed = [jax.device_put(a, s)
+                      for a, s in zip(loaded, sh_leaves)]
         else:
-            placed = [jax.numpy.asarray(a.astype(w.dtype))
-                      for a, w in zip(loaded, leaves)]
+            placed = [jax.numpy.asarray(a) for a in loaded]
         return treedef.unflatten(placed)
 
     def restore_latest(self, target_tree: Any, shardings: Any = None):

@@ -1,0 +1,43 @@
+"""Named fault points for crash-injection testing.
+
+Durability code (``pipeline/wal.py``, ``checkpoint.py``) calls
+``faultpoint(name)`` at the instants where a crash is interesting — mid
+record append, after append but before fsync, mid snapshot write, between
+the snapshot tmp-write and its atomic rename.  In production the hook is
+``None`` and the call is a dict-free attribute load + compare (~ns); under
+test, ``tests/faultpoints.crash_at`` installs a hook that raises a
+``SimulatedCrash`` at a chosen point, and the kill-and-restore suite then
+proves recovery from exactly that torn state.
+
+The registry lives in ``src`` (not ``tests``) so production modules never
+import test code; the *policy* (when to raise) stays in the test layer.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+# the canonical crash points; tests iterate this list so a new call site
+# must be registered here to be covered by the fault-injection suite
+FAULT_POINTS = (
+    "wal.mid_append",     # torn WAL record: header+partial payload on disk
+    "wal.after_append",   # full record written, fsync not yet issued
+    "ckpt.mid_write",     # snapshot tmp dir partially written, no manifest
+    "ckpt.pre_rename",    # complete tmp dir, atomic publish rename pending
+)
+
+_HOOK: Optional[Callable[[str], None]] = None
+
+
+def faultpoint(name: str) -> None:
+    """Crash-injection call site; no-op unless a hook is installed."""
+    if _HOOK is not None:
+        _HOOK(name)
+
+
+def set_fault_hook(hook: Optional[Callable[[str], None]]):
+    """Install (or clear, with ``None``) the fault hook; returns the
+    previous hook so nested scopes can restore it."""
+    global _HOOK
+    prev = _HOOK
+    _HOOK = hook
+    return prev

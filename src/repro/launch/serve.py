@@ -31,8 +31,8 @@ from repro.core import DELETE, INSERT, SEARCH, PIConfig, build
 from repro.models import make_decode_step, make_prefill_step
 from repro.models import decode as dec
 from repro.models.base import ModelConfig
-from repro.pipeline import (Collector, Dispatcher, PipelineMetrics,
-                            WindowConfig)
+from repro.pipeline import (Collector, Dispatcher, Durability,
+                            PipelineMetrics, WindowConfig)
 
 
 @dataclasses.dataclass
@@ -48,7 +48,10 @@ class Server:
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 8,
                  max_len: int = 64, index_backend: str = "xla",
-                 tick_width: int | None = None):
+                 tick_width: int | None = None,
+                 wal_dir: str | None = None,
+                 wal_fsync: str = "per_window",
+                 snapshot_every: int = 0):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -68,9 +71,23 @@ class Server:
         # width is what keeps the server on a single compiled execute
         self.tick_width = tick_width or max(8, n_slots)
         self.pipeline_metrics = PipelineMetrics()
-        self._collector = Collector(WindowConfig(batch=self.tick_width))
+        # optional durability tier: with wal_dir set, every tick window is
+        # written ahead to a segmented WAL before dispatch, and the session
+        # table is snapshotted every snapshot_every windows — recover the
+        # table after a crash with pipeline.recovery.recover(wal_dir)
+        self.durability = None
+        if wal_dir is not None:
+            self.durability = Durability(
+                wal_dir, table, fsync=wal_fsync,
+                snapshot_every=snapshot_every,
+                metrics=self.pipeline_metrics)
+        self._collector = Collector(
+            WindowConfig(batch=self.tick_width),
+            on_seal=(self.durability.on_seal
+                     if self.durability is not None else None))
         self._dispatcher = Dispatcher(table, depth=0,
-                                      metrics=self.pipeline_metrics)
+                                      metrics=self.pipeline_metrics,
+                                      durability=self.durability)
         self.free = list(range(n_slots))
         self.cache = dec.init_cache(cfg, n_slots, max_len)
         self.pos = np.zeros(n_slots, np.int32)
@@ -83,6 +100,11 @@ class Server:
     def table(self):
         """Current session-table state (owned by the dispatcher)."""
         return self._dispatcher.index
+
+    def close(self):
+        """Flush the durability tier (no-op when WAL is off)."""
+        if self.durability is not None:
+            self.durability.close()
 
     # -- PI session-table tick (one sorted batch per scheduler round) -----
     def _index_tick(self, admits, lookups, completes):

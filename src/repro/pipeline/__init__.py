@@ -19,8 +19,14 @@ it turns open-loop arrival streams into the static sorted batches
   metrics     enqueue→result latency histograms (p50/p95/p99), occupancy,
               rebuild counts, qps
 
+  wal         admission-point write-ahead log: one CRC-framed record per
+              sealed window, segmented files, configurable fsync policy
+  recovery    snapshot + WAL-tail coordinator: periodic index checkpoints
+              stamped with the WAL position, and ``recover()`` replaying
+              the tail through the same dispatcher execute path
+
 See DESIGN.md §6 for the architecture, the bulk-admission contract and
-the backpressure contract.
+the backpressure contract, and §7 for the durability contract.
 """
 from repro.pipeline.collector import (
     Collector, TRIGGER_DEADLINE, TRIGGER_FLUSH, TRIGGER_SIZE, Window,
@@ -30,6 +36,11 @@ from repro.pipeline.dispatcher import (
     DispatchOverflowError, Dispatcher, PendingOverflowError, WindowResult,
 )
 from repro.pipeline.metrics import LatencyHistogram, PipelineMetrics
+from repro.pipeline.recovery import Durability, RecoveryError, recover
+from repro.pipeline.wal import (
+    FSYNC_POLICIES, WalCorruptionError, WalRecord, WalWriter, read_wal,
+    record_window,
+)
 from repro.pipeline.workload import (
     PROCESSES, ArrivalConfig, ArrivalStream, arrival_times, make_arrivals,
 )
@@ -42,4 +53,7 @@ __all__ = [
     "Dispatcher", "DispatchOverflowError", "PendingOverflowError",
     "WindowResult",
     "LatencyHistogram", "PipelineMetrics",
+    "FSYNC_POLICIES", "WalCorruptionError", "WalRecord", "WalWriter",
+    "read_wal", "record_window",
+    "Durability", "RecoveryError", "recover",
 ]

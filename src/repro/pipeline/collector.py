@@ -73,7 +73,8 @@ class Window:
     slots: np.ndarray      # (n_arrivals,) int32 result slot per arrival
     t_open: float          # admission time of the first arrival
     t_enq: np.ndarray      # (n_arrivals,) float64 admission time per arrival
-    trigger: str           # size | deadline | flush
+    trigger: str           # size | deadline | flush | recovered
+    seq: Optional[int] = None  # WAL sequence number (stamped at append)
 
     @property
     def n_arrivals(self) -> int:
@@ -81,12 +82,21 @@ class Window:
 
 
 class Collector:
-    """Fixed-capacity admission window with size/deadline seal triggers."""
+    """Fixed-capacity admission window with size/deadline seal triggers.
 
-    def __init__(self, cfg: WindowConfig):
+    ``on_seal`` is the durability seam: called with every ``Window`` the
+    instant it seals — before the caller can dispatch it — so a
+    write-ahead log hooked here (``Durability.on_seal``) has the window
+    on disk before its effects can be exposed.  The hook sees windows in
+    seal order regardless of the admission path (scalar ``offer``, bulk
+    ``offer_many``, or an explicit ``take``).
+    """
+
+    def __init__(self, cfg: WindowConfig, on_seal=None):
         if cfg.batch < 1:
             raise ValueError("window batch must be >= 1")
         self.cfg = cfg
+        self.on_seal = on_seal
         self._sent = int(sentinel_for(np.dtype(cfg.key_dtype)))
         # bound locals: offer() runs once per arrival and is the pipeline's
         # host-side unit cost — keep its fast path free of attribute and
@@ -486,4 +496,6 @@ class Collector:
                      t_enq=np.concatenate(self._seg_tenq),
                      trigger=trigger)
         self._reset()
+        if self.on_seal is not None:
+            self.on_seal(win)
         return win

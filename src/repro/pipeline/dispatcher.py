@@ -136,6 +136,7 @@ class Dispatcher:
                  check_overflow: bool = True,
                  capacity_factor: float = 2.0,
                  metrics: Optional[PipelineMetrics] = None,
+                 durability=None,
                  clock=time.perf_counter):
         if isinstance(index, dist.ShardedPIIndex) and mesh is None:
             raise ValueError("a ShardedPIIndex needs its mesh for routing")
@@ -145,6 +146,11 @@ class Dispatcher:
         self.check_overflow = check_overflow
         self.capacity_factor = capacity_factor
         self.metrics = metrics
+        # durability tier (pipeline.recovery.Durability): submit() calls
+        # maybe_snapshot after each dispatched window so snapshots stamp
+        # the WAL seq of the last state-affecting window; the WAL append
+        # itself happens earlier, at the collector's seal hook
+        self.durability = durability
         self._clock = clock
         self._inflight: List[_InFlight] = []
         self._poisoned: Optional[BaseException] = None
@@ -191,6 +197,10 @@ class Dispatcher:
             jnp.asarray(window.vals))
         self._inflight.append(
             _InFlight(window, found, val, ovf, rebuilt, incr, dropped))
+        if self.durability is not None:
+            # the new index state reflects every window up to and
+            # including this one, so window.seq is its WAL position
+            self.durability.maybe_snapshot(self._index, window.seq)
         retired = []
         while len(self._inflight) > self.depth:
             retired.append(self._retire_front())
@@ -225,7 +235,9 @@ class Dispatcher:
         before returning, in retirement order.
         """
         col = collector if collector is not None else Collector(
-            wcfg if wcfg is not None else WindowConfig())
+            wcfg if wcfg is not None else WindowConfig(),
+            on_seal=(self.durability.on_seal
+                     if self.durability is not None else None))
         step = chunk or col.cfg.batch
         n = len(stream.t)
         qids = np.arange(n)

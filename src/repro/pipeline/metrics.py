@@ -67,6 +67,9 @@ class PipelineMetrics:
     n_slots: int = 0            # distinct executed queries (post-coalescing)
     n_rebuilds: int = 0
     n_rebuilds_incremental: int = 0  # rebuilds that took the segmented tier
+    wal_appends: int = 0        # sealed windows written ahead to the WAL
+    wal_fsyncs: int = 0         # fsyncs the policy actually issued
+    recovery_replayed: int = 0  # WAL windows replayed by recover()
     occupancy_sum: int = 0
     triggers: Dict[str, int] = dataclasses.field(default_factory=dict)
     t_start: Optional[float] = None
@@ -111,6 +114,9 @@ class PipelineMetrics:
             "mean_occupancy": occ,
             "rebuilds": self.n_rebuilds,
             "rebuilds_incremental": self.n_rebuilds_incremental,
+            "wal_appends": self.wal_appends,
+            "wal_fsyncs": self.wal_fsyncs,
+            "recovery_replayed": self.recovery_replayed,
             "triggers": dict(self.triggers),
             "qps": (self.n_arrivals / wall) if wall else None,
             "p50_ms": self.hist.percentile(50) * 1e3,

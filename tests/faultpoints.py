@@ -1,0 +1,53 @@
+"""Crash-point injection harness for the durability suite.
+
+Production code (``pipeline/wal.py``, ``checkpoint.py``) calls
+``repro.faults.faultpoint(name)`` at the moments a real crash would be
+most damaging; the hook is a no-op unless a test installs one.  This
+module provides the test side: ``crash_at(name)`` raises
+``SimulatedCrash`` out of the production code mid-operation, leaving the
+on-disk state exactly as a ``kill -9`` at that instruction would (the
+WAL writes are unbuffered, so Python-level interruption and process
+death tear the file at the same byte).
+
+The kill-and-restore pattern every durability test follows:
+
+    with crash_at("wal.mid_append", hit=3):
+        ... drive the pipeline until it dies ...
+    index, replayed = recover(directory)   # fresh process, same disk
+    ... assert replayed == the acknowledged-durable prefix ...
+"""
+import contextlib
+
+from repro import faults
+
+# re-exported so tests parametrize over the canonical list
+FAULT_POINTS = faults.FAULT_POINTS
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised out of a fault point to model the process dying there."""
+
+
+@contextlib.contextmanager
+def crash_at(name: str, hit: int = 1):
+    """Install a hook that raises ``SimulatedCrash`` on the ``hit``-th
+    time fault point ``name`` is reached; restores the previous hook on
+    exit.  ``hits_seen`` on the yielded object tells the test whether the
+    point was actually reached (a crash test that never crashes is
+    vacuous)."""
+    if name not in faults.FAULT_POINTS:
+        raise ValueError(f"unknown fault point {name!r}")
+    state = type("CrashState", (), {"hits_seen": 0, "crashed": False})()
+
+    def hook(point: str):
+        if point == name:
+            state.hits_seen += 1
+            if state.hits_seen == hit:
+                state.crashed = True
+                raise SimulatedCrash(name)
+
+    prev = faults.set_fault_hook(hook)
+    try:
+        yield state
+    finally:
+        faults.set_fault_hook(prev)

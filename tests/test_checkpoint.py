@@ -1,0 +1,176 @@
+"""CheckpointManager: atomic publish, completeness filtering, GC, and the
+async-failure contract (a background save that dies must re-raise from
+``wait()``, not vanish with its daemon thread).
+
+Referenced by ``checkpoint.py``'s module docstring — the partial/corrupt
+skipping behaviour ``latest_step`` promises is pinned here.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from faultpoints import SimulatedCrash, crash_at
+
+
+def tree(seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(4, 3)).astype(dtype)),
+            "b": [jnp.arange(5, dtype=jnp.int32),
+                  jnp.asarray(rng.integers(0, 9, 7).astype(np.int64))]}
+
+
+def target_like(t):
+    return {"a": jnp.zeros((4, 3), jnp.float32),
+            "b": [jnp.zeros(5, jnp.int32), jnp.zeros(7, jnp.int64)]}
+
+
+def assert_tree_equal(a, b):
+    import jax
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+
+
+# ---------------------------------------------------------------------------
+# round trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("blocking", [True, False])
+def test_save_restore_roundtrip(tmp_path, blocking):
+    t = tree()
+    m = CheckpointManager(str(tmp_path))
+    m.save(3, t, blocking=blocking, meta={"wal_seq": 3})
+    m.wait()
+    assert m.latest_step() == 3
+    got = m.restore(3, target_like(t))
+    assert_tree_equal(got, t)
+    with open(os.path.join(str(tmp_path), "step_3", "manifest.json")) as f:
+        assert json.load(f)["meta"]["wal_seq"] == 3
+
+
+def test_restore_latest_empty_dir(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    assert m.latest_step() is None
+    assert m.restore_latest(target_like(tree())) == (None, None)
+
+
+# ---------------------------------------------------------------------------
+# completeness filtering (what makes the atomic publish worth having)
+# ---------------------------------------------------------------------------
+
+def test_latest_step_skips_partial_and_corrupt(tmp_path):
+    t = tree()
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, t, blocking=True)
+    m.save(2, t, blocking=True)
+    # a .tmp dir (crash before rename) must be invisible
+    os.makedirs(os.path.join(str(tmp_path), "step_9.tmp"))
+    # a published dir with a corrupt manifest must be skipped, not crash
+    bad = os.path.join(str(tmp_path), "step_7")
+    os.makedirs(bad)
+    with open(os.path.join(bad, "manifest.json"), "w") as f:
+        f.write("{not json")
+    # a manifest without complete=True is a failed publish
+    worse = os.path.join(str(tmp_path), "step_8")
+    os.makedirs(worse)
+    with open(os.path.join(worse, "manifest.json"), "w") as f:
+        json.dump({"step": 8}, f)
+    assert m.all_steps() == [1, 2]
+    assert m.latest_step() == 2
+
+
+def test_crash_mid_write_leaves_no_visible_checkpoint(tmp_path):
+    t = tree()
+    m = CheckpointManager(str(tmp_path))
+    with crash_at("ckpt.mid_write"):
+        with pytest.raises(SimulatedCrash):
+            m.save(5, t, blocking=True)
+    assert m.latest_step() is None     # arrays down, manifest missing
+    assert os.path.isdir(os.path.join(str(tmp_path), "step_5.tmp"))
+
+
+def test_crash_pre_rename_leaves_no_visible_checkpoint(tmp_path):
+    t = tree()
+    m = CheckpointManager(str(tmp_path))
+    with crash_at("ckpt.pre_rename"):
+        with pytest.raises(SimulatedCrash):
+            m.save(5, t, blocking=True)
+    assert m.latest_step() is None     # complete .tmp, never published
+    # ...and a later save of the same step publishes cleanly over it
+    m.save(5, t, blocking=True)
+    assert m.latest_step() == 5
+    assert_tree_equal(m.restore(5, target_like(t)), t)
+
+
+# ---------------------------------------------------------------------------
+# async failure surfacing (the swallowed-exception regression)
+# ---------------------------------------------------------------------------
+
+def test_async_save_failure_reraises_from_wait(tmp_path):
+    t = tree()
+    m = CheckpointManager(str(tmp_path))
+    with crash_at("ckpt.mid_write"):
+        m.save(4, t, blocking=False)   # returns immediately...
+        with pytest.raises(SimulatedCrash):
+            m.wait()                   # ...the thread's death surfaces here
+    assert m.latest_step() is None
+    # the latch is one-shot: the manager is usable again afterwards
+    m.wait()
+    m.save(6, t, blocking=True)
+    assert m.latest_step() == 6
+
+
+def test_async_save_failure_reraises_from_next_save(tmp_path):
+    """save() joins the previous thread via wait(), so back-to-back saves
+    also surface the earlier failure instead of overwriting it."""
+    t = tree()
+    m = CheckpointManager(str(tmp_path))
+    with crash_at("ckpt.mid_write"):
+        m.save(4, t, blocking=False)
+        with pytest.raises(SimulatedCrash):
+            m.save(5, t, blocking=False)
+    m.save(5, t, blocking=True)
+    assert m.latest_step() == 5
+
+
+# ---------------------------------------------------------------------------
+# GC + strictness
+# ---------------------------------------------------------------------------
+
+def test_keep_gc(tmp_path):
+    t = tree()
+    m = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        m.save(s, t, blocking=True)
+    assert m.all_steps() == [3, 4]
+    assert not os.path.exists(os.path.join(str(tmp_path), "step_1"))
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    t = tree()
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, t, blocking=True)
+    bad = target_like(t)
+    bad["a"] = jnp.zeros((4, 4), jnp.float32)
+    with pytest.raises(ValueError, match="shape"):
+        m.restore(1, bad)
+
+
+def test_restore_dtype_mismatch_raises(tmp_path):
+    """A dtype drift between writer and reader is a geometry bug; silently
+    casting would let a recovered index diverge bit-wise from the live
+    one."""
+    t = tree()
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, t, blocking=True)
+    bad = target_like(t)
+    # numpy leaf: jnp would silently truncate int64 back to int32 (x64 off)
+    bad["b"][0] = np.zeros(5, np.int64)
+    with pytest.raises(ValueError, match="dtype"):
+        m.restore(1, bad)

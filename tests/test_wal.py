@@ -1,0 +1,278 @@
+"""WAL unit layer: record codec, segment scanning, the corruption matrix.
+
+The contract under test (DESIGN.md §7): every surviving record decodes
+bit-identically to the window that was logged; a torn *tail* recovers to
+the prefix before it; any *interior* damage — CRC mismatch with valid
+data after it, sequence duplicate or gap, a missing segment — raises
+``WalCorruptionError`` rather than silently dropping records.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.pipeline import Collector, WindowConfig
+from repro.pipeline.wal import (WalCorruptionError, WalWriter, _HEADER,
+                                encode_record, read_wal, record_window)
+
+
+def mk_windows(n_windows, batch=8, seed=0, key_dtype="int32",
+               key_space=50):
+    """Seal realistic windows (coalescing on) from a random op stream."""
+    rng = np.random.default_rng(seed)
+    n = n_windows * batch * 2          # coalescing shrinks occupancy
+    col = Collector(WindowConfig(batch=batch, key_dtype=key_dtype))
+    ops = rng.integers(0, 3, n).astype(np.int32)
+    keys = rng.integers(1, key_space, n).astype(key_dtype)
+    vals = rng.integers(0, 1000, n).astype(np.int32)
+    _, sealed = col.offer_many(np.arange(n, dtype=np.float64), ops, keys,
+                               vals, np.arange(n))
+    tail = col.take()
+    if tail is not None:
+        sealed.append(tail)
+    return sealed[:n_windows] if len(sealed) >= n_windows else sealed
+
+
+def write_log(directory, windows, **kw):
+    w = WalWriter(directory, **kw)
+    for win in windows:
+        w.append(win)
+    w.close()
+    return w
+
+
+def assert_record_matches(rec, win):
+    occ = win.occupancy
+    assert rec.occupancy == occ
+    assert rec.batch == win.ops.shape[0]
+    assert np.array_equal(rec.ops, win.ops[:occ])
+    assert np.array_equal(rec.keys, win.keys[:occ])
+    assert rec.keys.dtype == win.keys.dtype
+    assert np.array_equal(rec.vals, win.vals[:occ])
+    assert rec.qids.tolist() == list(win.qids)
+    assert np.array_equal(rec.slots, win.slots)
+
+
+# ---------------------------------------------------------------------------
+# codec
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("key_dtype", ["int32", "int64"])
+def test_roundtrip_write_read(tmp_path, key_dtype):
+    wins = mk_windows(5, key_dtype=key_dtype, seed=3)
+    write_log(str(tmp_path), wins)
+    recs = read_wal(str(tmp_path))
+    assert [r.seq for r in recs] == list(range(1, len(wins) + 1))
+    for rec, win in zip(recs, wins):
+        assert_record_matches(rec, win)
+        assert win.seq == rec.seq      # append stamps the window
+
+
+def test_record_window_reconstructs_exact_batch(tmp_path):
+    """Replay re-padding must be byte-for-byte what ``_seal`` produced —
+    this is what makes recovery bit-identical to live execution."""
+    wins = mk_windows(4, seed=7)
+    write_log(str(tmp_path), wins)
+    for rec, win in zip(read_wal(str(tmp_path)), wins):
+        re = record_window(rec)
+        assert np.array_equal(re.ops, win.ops)
+        assert np.array_equal(re.keys, win.keys)
+        assert re.keys.dtype == win.keys.dtype
+        assert np.array_equal(re.vals, win.vals)
+        assert re.occupancy == win.occupancy
+        assert re.qids == list(win.qids)
+        assert np.array_equal(re.slots, win.slots)
+        assert re.trigger == "recovered"
+
+
+def test_segment_rotation_spans_are_continuous(tmp_path):
+    wins = mk_windows(8, seed=1)
+    blob = encode_record(1, wins[0])
+    # segment cap of ~2 records forces several rotations
+    write_log(str(tmp_path), wins, segment_bytes=2 * len(blob) - 8)
+    segs = [f for f in os.listdir(tmp_path) if f.endswith(".seg")]
+    assert len(segs) >= 3
+    recs = read_wal(str(tmp_path))
+    assert [r.seq for r in recs] == list(range(1, len(wins) + 1))
+
+
+def test_writer_refuses_stale_seq(tmp_path):
+    wins = mk_windows(2)
+    w = WalWriter(str(tmp_path))
+    w.append(wins[0])
+    wins[1].seq = 99                   # wired through a different log
+    with pytest.raises(ValueError, match="seal order"):
+        w.append(wins[1])
+    w.close()
+
+
+# ---------------------------------------------------------------------------
+# fsync policy
+# ---------------------------------------------------------------------------
+
+def test_fsync_per_window_acks_every_append(tmp_path):
+    wins = mk_windows(4)
+    w = WalWriter(str(tmp_path), fsync="per_window")
+    for win in wins:
+        seq = w.append(win)
+        assert w.durable_seq == seq    # acked == durable, every append
+    assert w.n_fsyncs == len(wins)
+    w.close()
+
+
+def test_fsync_off_never_acks(tmp_path):
+    wins = mk_windows(4)
+    w = WalWriter(str(tmp_path), fsync="off")
+    for win in wins:
+        w.append(win)
+    assert w.n_fsyncs == 0
+    assert w.durable_seq == 0          # nothing guaranteed
+    w.close()
+    assert w.n_fsyncs == 0             # close must not fsync under "off"
+
+
+def test_fsync_interval_coalesces(tmp_path):
+    wins = mk_windows(6)
+    # huge interval: no append-driven fsync fires, close() syncs once
+    w = WalWriter(str(tmp_path), fsync="interval", fsync_interval=3600.0)
+    for win in wins:
+        w.append(win)
+    assert w.n_fsyncs == 0
+    w.close()
+    assert w.n_fsyncs == 1
+    assert w.durable_seq == len(wins)
+
+
+def test_bad_policy_rejected(tmp_path):
+    with pytest.raises(ValueError, match="fsync"):
+        WalWriter(str(tmp_path), fsync="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# corruption matrix
+# ---------------------------------------------------------------------------
+
+def _single_segment(tmp_path):
+    segs = [f for f in sorted(os.listdir(tmp_path)) if f.endswith(".seg")]
+    assert len(segs) == 1
+    return os.path.join(str(tmp_path), segs[0])
+
+
+def test_truncated_tail_recovers_prefix(tmp_path):
+    wins = mk_windows(5, seed=2)
+    write_log(str(tmp_path), wins)
+    path = _single_segment(tmp_path)
+    last = encode_record(len(wins), wins[-1])
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:       # tear the final record mid-payload
+        f.truncate(size - len(last) // 2)
+    recs = read_wal(str(tmp_path))
+    assert [r.seq for r in recs] == list(range(1, len(wins)))
+    for rec, win in zip(recs, wins):
+        assert_record_matches(rec, win)
+
+
+def test_truncated_tail_repaired_on_reopen(tmp_path):
+    """Reopening a torn log truncates the tail and resumes the seq."""
+    wins = mk_windows(5, seed=2)
+    write_log(str(tmp_path), wins)
+    path = _single_segment(tmp_path)
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) - 3)
+    w = WalWriter(str(tmp_path))
+    assert w.last_seq == len(wins) - 1
+    extra = mk_windows(1, seed=9)[0]
+    assert w.append(extra) == len(wins)  # reuses the torn record's seq
+    w.close()
+    assert [r.seq for r in read_wal(str(tmp_path))] == \
+        list(range(1, len(wins) + 1))
+
+
+def test_interior_bitflip_raises(tmp_path):
+    """CRC damage with valid records after it is NOT a torn tail: failing
+    loudly is the contract — recovery must never skip interior records."""
+    wins = mk_windows(5, seed=2)
+    write_log(str(tmp_path), wins)
+    path = _single_segment(tmp_path)
+    off = _HEADER.size + 4             # inside record 1's payload
+    with open(path, "r+b") as f:
+        f.seek(off)
+        b = f.read(1)
+        f.seek(off)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(WalCorruptionError, match="interior"):
+        read_wal(str(tmp_path))
+
+
+def test_final_record_bitflip_recovers_prefix(tmp_path):
+    """Damage confined to the last record, nothing valid after it → a
+    torn tail by the disambiguation rule: prefix survives."""
+    wins = mk_windows(5, seed=2)
+    write_log(str(tmp_path), wins)
+    path = _single_segment(tmp_path)
+    last = encode_record(len(wins), wins[-1])
+    off = os.path.getsize(path) - len(last) + _HEADER.size + 2
+    with open(path, "r+b") as f:
+        f.seek(off)
+        b = f.read(1)
+        f.seek(off)
+        f.write(bytes([b[0] ^ 0xFF]))
+    recs = read_wal(str(tmp_path))
+    assert [r.seq for r in recs] == list(range(1, len(wins)))
+
+
+def test_duplicate_seq_raises(tmp_path):
+    wins = mk_windows(3, seed=2)
+    write_log(str(tmp_path), wins)
+    path = _single_segment(tmp_path)
+    with open(path, "ab") as f:        # replay record 2 at the tail
+        f.write(encode_record(2, wins[1]))
+    with pytest.raises(WalCorruptionError, match="duplicate"):
+        read_wal(str(tmp_path))
+
+
+def test_seq_gap_raises(tmp_path):
+    wins = mk_windows(3, seed=2)
+    write_log(str(tmp_path), wins)
+    path = _single_segment(tmp_path)
+    with open(path, "ab") as f:        # seq 5 after 3: records lost
+        f.write(encode_record(5, wins[0]))
+    with pytest.raises(WalCorruptionError, match="gap"):
+        read_wal(str(tmp_path))
+
+
+def test_missing_segment_raises(tmp_path):
+    wins = mk_windows(8, seed=1)
+    blob = encode_record(1, wins[0])
+    write_log(str(tmp_path), wins, segment_bytes=2 * len(blob) - 8)
+    segs = sorted(f for f in os.listdir(tmp_path) if f.endswith(".seg"))
+    assert len(segs) >= 3
+    os.remove(os.path.join(str(tmp_path), segs[1]))
+    with pytest.raises(WalCorruptionError,
+                       match="missing|next segment starts"):
+        read_wal(str(tmp_path))
+
+
+def test_truncate_through_drops_only_covered_whole_segments(tmp_path):
+    wins = mk_windows(8, seed=1)
+    blob = encode_record(1, wins[0])
+    w = WalWriter(str(tmp_path), segment_bytes=2 * len(blob) - 8)
+    for win in wins:
+        w.append(win)
+    n_before = len([f for f in os.listdir(tmp_path) if f.endswith(".seg")])
+    assert n_before >= 3
+    w.truncate_through(3)              # snapshot at seq 3 is durable
+    n_after = len([f for f in os.listdir(tmp_path) if f.endswith(".seg")])
+    assert n_after < n_before          # some prefix was reclaimed...
+    recs = read_wal(str(tmp_path))
+    # ...but every record the snapshot does NOT cover survived, contiguous
+    assert recs[0].seq <= 4
+    assert [r.seq for r in recs] == \
+        list(range(recs[0].seq, len(wins) + 1))
+    # truncating past the end keeps the live segment: the log stays openable
+    w.truncate_through(10 ** 6)
+    assert len([f for f in os.listdir(tmp_path) if f.endswith(".seg")]) == 1
+    w.close()
+    w2 = WalWriter(str(tmp_path))
+    assert w2.last_seq == len(wins)
+    w2.close()
