@@ -18,23 +18,31 @@ same uniform stream admitted through the scalar ``offer`` loop vs
 vectorized ``offer_many`` (no dispatch), whose ratio is the lifted
 admission ceiling.  A ``durability`` block measures the WAL tax: the
 pipelined replay with the admission-point WAL off vs on under each
-fsync policy (``config.durability_tax`` records the qps ratios).
-``BENCH_pipeline.json`` carries the same rows for the perf trajectory.
+fsync policy (``config.durability_tax`` records the qps ratios).  An
+``overload`` block measures the degradation tier (DESIGN.md §8):
+breaker recovery at 2x pending capacity, shed rate and goodput under a
+write flood, and the adaptive deadline controller against a static
+baseline on a diurnal stream.  ``BENCH_pipeline.json`` carries the
+same rows for the perf trajectory.
 """
 from __future__ import annotations
 
 import dataclasses
 import tempfile
 import time
+import types
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, make_index, replay_stream
+from benchmarks.common import default_backend, emit, make_index, replay_stream
 from repro import data as data_mod
+from repro.core import INSERT, PIConfig, build
 from repro.pipeline import (ArrivalConfig, Collector, Dispatcher, Durability,
-                            PipelineMetrics, WindowConfig, make_arrivals)
+                            OverloadConfig, OverloadController,
+                            PipelineMetrics, RetryPolicy, WindowConfig,
+                            make_arrivals)
 
 
 def replay(index, stream, wcfg: WindowConfig, depth: int, bulk: bool):
@@ -169,6 +177,164 @@ def durability_bench(n_keys: int, batch: int, n_arrivals: int,
     return rows, tax
 
 
+def overload_bench(backend=None):
+    """Overload tier under saturation: three ``overload`` row blocks.
+
+    ``breaker``   a distinct-insert burst at well over 2x the pending
+                  capacity, shedding off — the geometry that used to
+                  poison the dispatcher.  The circuit breaker must absorb
+                  every overflow (recoveries == trips, goodput 1.0).
+    ``shed``      a write-heavy hotkey flood through the full
+                  ``OverloadController``: per-class shedding with bounded
+                  retries.  Goodput is the acked fraction; the shed rate
+                  and class split land in ``config.overload.shed``.
+    ``deadline``  a diurnal stream replayed on its own (virtual) time
+                  axis with the adaptive deadline controller on vs off.
+                  The retune trajectory is recorded and adaptive goodput
+                  must not trail the static baseline.
+
+    Geometry note (same as tests/test_overload.py): for the pending
+    buffer to overflow, windows must accumulate fill across retirements —
+    so ``batch <= 3/4 * pending_capacity`` (the rebuild trigger fires at
+    3/4 fill) and the seeded index is large enough that the 15%-churn
+    rebuild trigger stays quiet.
+    """
+    now = time.perf_counter
+    pc, batch = 256, 160
+    rng = np.random.default_rng(11)
+    keys0 = np.unique(rng.integers(1, 1 << 20, 6144).astype(np.int32))
+    seed_idx = build(
+        PIConfig(capacity=1 << 15, pending_capacity=pc, fanout=8,
+                 backend=backend or default_backend()),
+        jnp.asarray(keys0),
+        jnp.asarray(rng.integers(0, 1 << 20, keys0.size).astype(np.int32)))
+    fresh = lambda: jax.tree.map(jnp.copy, seed_idx)
+    rows, summary = [], {}
+
+    # -- breaker: 2x+ pending capacity, shedding off ----------------------
+    n_burst = 4 * pc
+    burst = types.SimpleNamespace(
+        t=np.arange(n_burst, dtype=np.float64),
+        ops=np.full(n_burst, INSERT, np.int32),
+        keys=(2_000_000 + np.arange(n_burst)).astype(np.int32),
+        vals=np.arange(n_burst, dtype=np.int32))
+    m = PipelineMetrics()
+    disp = Dispatcher(fresh(), depth=1, metrics=m,
+                      overload=OverloadConfig(shed=False,
+                                              max_recoveries=10_000))
+    m.start(now())
+    retired = disp.run(burst, collector=Collector(WindowConfig(batch=batch)),
+                       chunk=batch, clock=now)
+    m.stop(now())
+    acked = {}
+    for r in retired:
+        acked.update(r.per_arrival())
+    s = m.summary()
+    assert s["breaker_trips"] >= 1, "burst geometry never overflowed"
+    assert s["breaker_recoveries"] == s["breaker_trips"]
+    assert len(acked) == n_burst, "breaker recovery lost an admitted op"
+    rows.append(("overload", "burst", 0.0, "breaker", round(s["qps"]),
+                 round(s["p50_ms"], 3), round(s["p99_ms"], 3), s["windows"],
+                 round(s["mean_occupancy"]), s["coalesced"]))
+    summary["breaker"] = {
+        "trips": s["breaker_trips"], "recoveries": s["breaker_recoveries"],
+        "goodput": round(len(acked) / n_burst, 3),
+        "pending_fill_peak": round(s["pending_fill_peak"], 3)}
+    print(f"[pipeline] overload breaker: {s['breaker_trips']} overflows "
+          f"recovered, goodput {len(acked) / n_burst:.3f} at 4x pending "
+          f"capacity")
+
+    # -- shed: hotkey write flood through the controller ------------------
+    n_flood = 6144
+    flood = make_arrivals(
+        ArrivalConfig(process="hotkey", rate=1e4, n_arrivals=n_flood,
+                      hot_keys=4, hot_frac=0.8, seed=3),
+        data_mod.YCSBConfig(write_ratio=0.6, theta=0.9), keys0)
+    m = PipelineMetrics()
+    ctl = OverloadController(
+        OverloadConfig(shed_dup_at=0.15, shed_search_at=0.3,
+                       shed_write_at=0.95, adapt_deadline=False,
+                       max_recoveries=10_000),
+        metrics=m, retry=RetryPolicy(max_retries=3))
+    disp = Dispatcher(fresh(), depth=1, metrics=m, overload=ctl.cfg)
+    m.start(now())
+    rep = ctl.run(disp, Collector(WindowConfig(batch=batch)), flood,
+                  chunk=batch, clock=now)
+    m.stop(now())
+    s = m.summary()
+    rows.append(("overload", "hotkey", 0.9, "shed", round(s["qps"]),
+                 round(s["p50_ms"], 3), round(s["p99_ms"], 3), s["windows"],
+                 round(s["mean_occupancy"]), s["coalesced"]))
+    summary["shed"] = {
+        "goodput": round(rep.goodput / n_flood, 3),
+        "shed_rate": round(s["shed_total"] / n_flood, 3),
+        "shed_by_class": s["shed_by_class"], "retries": rep.retries,
+        "dropped": len(rep.dropped),
+        "pending_fill_peak": round(s["pending_fill_peak"], 3)}
+    print(f"[pipeline] overload shed: goodput "
+          f"{rep.goodput / n_flood:.3f}, shed rate "
+          f"{s['shed_total'] / n_flood:.3f} ({s['shed_by_class']})")
+
+    # -- deadline: diurnal stream, adaptive vs static ---------------------
+    idx_d = build(
+        PIConfig(capacity=1 << 15, pending_capacity=1024, fanout=8,
+                 backend=backend or default_backend()),
+        jnp.asarray(keys0),
+        jnp.asarray(rng.integers(0, 1 << 20, keys0.size).astype(np.int32)))
+    diurnal = make_arrivals(
+        ArrivalConfig(process="diurnal", rate=2e3, n_arrivals=8000,
+                      period=0.5, swing=0.95, seed=5),
+        data_mod.YCSBConfig(write_ratio=0.2), keys0)
+
+    def deadline_run(adapt: bool):
+        mets = PipelineMetrics()
+        ocfg = OverloadConfig(shed=False, breaker=False,
+                              adapt_deadline=adapt, adjust_every=4,
+                              hysteresis=2, deadline_min=1e-3,
+                              deadline_max=0.5, deadline_step=2.0,
+                              fill_low=0.5)
+        # virtual time axis: the stream's own stamps drive deadline seals,
+        # so the controller sees the diurnal shape, not host jitter
+        d = Dispatcher(jax.tree.map(jnp.copy, idx_d), depth=1, metrics=mets,
+                       clock=lambda: 0.0)
+        col = Collector(WindowConfig(batch=64, deadline=0.002))
+        c = OverloadController(ocfg, metrics=mets)
+        t0 = now()
+        r = c.run(d, col, diurnal, chunk=64)
+        dt = now() - t0
+        return mets.summary(), r, c, col, dt
+
+    # best-of-2 per mode amortizes the one-time compile into the discard
+    runs = {adapt: min((deadline_run(adapt) for _ in range(2)),
+                       key=lambda r: r[-1])
+            for adapt in (False, True)}
+    for adapt, mode in ((False, "deadline_static"), (True, "deadline_adapt")):
+        s, rep, _, _, dt = runs[adapt]
+        # virtual-time latencies are not comparable to the wall rows;
+        # report wall goodput/s and leave the latency columns zero
+        rows.append(("overload", "diurnal", 0.0, mode,
+                     round(rep.goodput / dt), 0.0, 0.0, s["windows"],
+                     round(s["mean_occupancy"]), s["coalesced"]))
+    s_st, rep_st, _, _, _ = runs[False]
+    s_ad, rep_ad, ctl_ad, col_ad, _ = runs[True]
+    assert s_ad["deadline_updates"] >= 1, "controller never retuned"
+    assert rep_ad.goodput >= rep_st.goodput, \
+        "adaptive deadline lost goodput vs the static baseline"
+    summary["deadline"] = {
+        "updates": s_ad["deadline_updates"],
+        "final": col_ad.deadline,
+        "trajectory": [list(p) for p in ctl_ad.deadline_controller.trajectory],
+        "goodput_adapt": rep_ad.goodput, "goodput_static": rep_st.goodput,
+        "occupancy_gain": round(s_ad["mean_occupancy"]
+                                / max(s_st["mean_occupancy"], 1e-9), 3),
+        "windows_adapt": s_ad["windows"], "windows_static": s_st["windows"]}
+    print(f"[pipeline] overload deadline: {s_ad['deadline_updates']} "
+          f"retunes to {col_ad.deadline:.4g}s, "
+          f"{summary['deadline']['occupancy_gain']:.2f}x occupancy vs "
+          f"static ({s_ad['windows']} vs {s_st['windows']} windows)")
+    return rows, summary
+
+
 def one_scenario(process: str, theta: float, n_keys: int, batch: int,
                  n_arrivals: int, backend=None):
     idx, keys, ycfg = make_index(n_keys, backend=backend)
@@ -225,6 +391,8 @@ def main(n_keys=1 << 18, batch=8192, n_arrivals=1 << 16,
     durability_rows, durability_tax = durability_bench(
         n_keys, batch, n_arrivals)
     rows += durability_rows
+    overload_rows, overload_summary = overload_bench()
+    rows += overload_rows
     return emit(rows, ("fig", "process", "theta", "mode", "qps", "p50_ms",
                        "p99_ms", "windows", "occupancy", "coalesced"),
                 fig="pipeline",
@@ -233,7 +401,8 @@ def main(n_keys=1 << 18, batch=8192, n_arrivals=1 << 16,
                         "write_ratio": 0.0, "speedup": speedups,
                         "speedup_geomean": geomean,
                         "admission_speedup": admission_speedup,
-                        "durability_tax": durability_tax})
+                        "durability_tax": durability_tax,
+                        "overload": overload_summary})
 
 
 if __name__ == "__main__":

@@ -32,7 +32,7 @@ from repro.models import make_decode_step, make_prefill_step
 from repro.models import decode as dec
 from repro.models.base import ModelConfig
 from repro.pipeline import (Collector, Dispatcher, Durability,
-                            PipelineMetrics, WindowConfig)
+                            OverloadConfig, PipelineMetrics, WindowConfig)
 
 
 @dataclasses.dataclass
@@ -51,7 +51,8 @@ class Server:
                  tick_width: int | None = None,
                  wal_dir: str | None = None,
                  wal_fsync: str = "per_window",
-                 snapshot_every: int = 0):
+                 snapshot_every: int = 0,
+                 overload: OverloadConfig | None = None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -77,17 +78,27 @@ class Server:
         # table after a crash with pipeline.recovery.recover(wal_dir)
         self.durability = None
         if wal_dir is not None:
+            # async snapshots: a periodic save must not stall the tick —
+            # the background thread materializes the pytree, and its
+            # errors surface at the next snapshot/close
             self.durability = Durability(
                 wal_dir, table, fsync=wal_fsync,
                 snapshot_every=snapshot_every,
-                metrics=self.pipeline_metrics)
+                metrics=self.pipeline_metrics,
+                async_snapshots=True)
         self._collector = Collector(
             WindowConfig(batch=self.tick_width),
             on_seal=(self.durability.on_seal
                      if self.durability is not None else None))
+        # the serving path arms the circuit breaker by default: a session
+        # table that poisons on one pending overflow takes the whole
+        # server down, while a recovered one costs a repack
         self._dispatcher = Dispatcher(table, depth=0,
                                       metrics=self.pipeline_metrics,
-                                      durability=self.durability)
+                                      durability=self.durability,
+                                      overload=(overload if overload
+                                                is not None
+                                                else OverloadConfig()))
         self.free = list(range(n_slots))
         self.cache = dec.init_cache(cfg, n_slots, max_len)
         self.pos = np.zeros(n_slots, np.int32)

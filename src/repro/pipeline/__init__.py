@@ -24,9 +24,15 @@ it turns open-loop arrival streams into the static sorted batches
   recovery    snapshot + WAL-tail coordinator: periodic index checkpoints
               stamped with the WAL position, and ``recover()`` replaying
               the tail through the same dispatcher execute path
+  overload    graceful degradation under pressure: op-class-aware load
+              shedding with retry-after hints, an adaptive deadline
+              controller retuning the collector online, and the circuit
+              breaker the dispatcher uses to recover from pending
+              overflow instead of poisoning
 
 See DESIGN.md §6 for the architecture, the bulk-admission contract and
-the backpressure contract, and §7 for the durability contract.
+the backpressure contract, §7 for the durability contract, and §8 for
+the overload contract.
 """
 from repro.pipeline.collector import (
     Collector, TRIGGER_DEADLINE, TRIGGER_FLUSH, TRIGGER_SIZE, Window,
@@ -36,18 +42,25 @@ from repro.pipeline.dispatcher import (
     DispatchOverflowError, Dispatcher, PendingOverflowError, WindowResult,
 )
 from repro.pipeline.metrics import LatencyHistogram, PipelineMetrics
+from repro.pipeline.overload import (
+    AdmissionController, BREAKER_CLOSED, BREAKER_POISONED, BREAKER_READ_ONLY,
+    BREAKER_RECOVERING, DeadlineController, OverloadConfig,
+    OverloadController, ReadOnlyModeError, RunReport, SHED_SEARCH,
+    SHED_SEARCH_DUP, SHED_WRITE,
+)
 from repro.pipeline.recovery import Durability, RecoveryError, recover
 from repro.pipeline.wal import (
     FSYNC_POLICIES, WalCorruptionError, WalRecord, WalWriter, read_wal,
     record_window,
 )
 from repro.pipeline.workload import (
-    PROCESSES, ArrivalConfig, ArrivalStream, arrival_times, make_arrivals,
+    PROCESSES, ArrivalConfig, ArrivalStream, RetryPolicy, arrival_times,
+    make_arrivals,
 )
 
 __all__ = [
     "ArrivalConfig", "ArrivalStream", "PROCESSES", "arrival_times",
-    "make_arrivals",
+    "make_arrivals", "RetryPolicy",
     "Collector", "Window", "WindowConfig",
     "TRIGGER_SIZE", "TRIGGER_DEADLINE", "TRIGGER_FLUSH",
     "Dispatcher", "DispatchOverflowError", "PendingOverflowError",
@@ -56,4 +69,9 @@ __all__ = [
     "FSYNC_POLICIES", "WalCorruptionError", "WalRecord", "WalWriter",
     "read_wal", "record_window",
     "Durability", "RecoveryError", "recover",
+    "OverloadConfig", "OverloadController", "AdmissionController",
+    "DeadlineController", "RunReport", "ReadOnlyModeError",
+    "BREAKER_CLOSED", "BREAKER_RECOVERING", "BREAKER_READ_ONLY",
+    "BREAKER_POISONED",
+    "SHED_SEARCH_DUP", "SHED_SEARCH", "SHED_WRITE",
 ]

@@ -138,11 +138,49 @@ class Collector:
         self._lazy_keys: Optional[np.ndarray] = None
         self._lazy_slots: Optional[np.ndarray] = None
 
+    # -- policy retuning ---------------------------------------------------
+
+    @property
+    def deadline(self) -> float:
+        """The deadline currently in force (may differ from ``cfg.deadline``
+        once a controller has retuned it)."""
+        return self._deadline
+
+    def set_deadline(self, deadline: float):
+        """Retune the seal deadline online (the adaptive-deadline seam).
+
+        Takes effect from the *next* expiry check — the currently-open
+        window is judged against the new value too, which is what an
+        overload controller wants (shrinking the deadline must be able to
+        seal an already-old window).  ``batch`` is deliberately not
+        retunable: it is the static compiled shape.
+        """
+        if not deadline > 0.0:
+            raise ValueError(f"deadline must be > 0, got {deadline}")
+        self._deadline = float(deadline)
+
+    def coalesce_hits(self, keys) -> np.ndarray:
+        """Which of ``keys`` hold a coalescing point in the open window.
+
+        A SEARCH on such a key would share an already-occupied slot — its
+        result duplicates a query the window already carries, which makes
+        it the cheapest possible arrival to shed under overload (the
+        client is rereading an answer the system is about to produce
+        anyway).  Vectorized; read-only (admission state untouched).
+        """
+        keys = np.asarray(keys)
+        if not self._coalesce or (not self._search_slot
+                                  and self._lazy_keys is None):
+            return np.zeros(keys.shape, bool)
+        uk = np.unique(keys)
+        hit_uk = self._prior_slots(uk) >= 0
+        return hit_uk[np.searchsorted(uk, keys)]
+
     # -- admission ---------------------------------------------------------
 
     def _expired(self, now: float) -> bool:
         return (self._t_open is not None
-                and now - self._t_open >= self.cfg.deadline)
+                and now - self._t_open >= self._deadline)
 
     def ready(self, now: Optional[float] = None) -> bool:
         """A sealed window is waiting (size hit, or deadline passed)."""

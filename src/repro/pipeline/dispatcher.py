@@ -28,6 +28,16 @@ retirement.  Sharded routing has an analogous loss mode — a fence bucket
 exceeding its ``capacity_factor`` drops real queries — surfaced as
 ``DispatchOverflowError`` the same way.  Rebuild bookkeeping rides the
 same snapshot mechanism, so none of these checks force an early sync.
+
+With an ``OverloadConfig`` installed, a pending overflow is no longer
+fatal: a **circuit breaker** (DESIGN.md §8) rolls the index back to the
+state before the failing window (kept for free — nothing is donated, so
+the pre-execute buffers are intact), forces a full repack to reclaim the
+pending space, replays the quarantined windows through the same execute
+path, and resumes.  Repeated trips within a rolling interval degrade to a
+read-only mode (write windows rejected with ``ReadOnlyModeError``, reads
+served); only an unrecoverable replay — overflow on an *empty* pending
+buffer, a geometry error — latches the legacy poisoned state.
 """
 from __future__ import annotations
 
@@ -41,8 +51,12 @@ import numpy as np
 
 from repro.core import distributed as dist
 from repro.core import index as pi
+from repro.core.batch import SEARCH
 from repro.pipeline.collector import Collector, Window, WindowConfig
 from repro.pipeline.metrics import PipelineMetrics
+from repro.pipeline.overload import (BREAKER_CLOSED, BREAKER_POISONED,
+                                     BREAKER_READ_ONLY, BREAKER_RECOVERING,
+                                     OverloadConfig, ReadOnlyModeError)
 
 
 class PendingOverflowError(RuntimeError):
@@ -86,13 +100,38 @@ def _step_single(index, ops, keys, vals):
     """
     new_index, (found, val) = pi.execute_impl(index, ops, keys, vals)
     ovf = new_index.overflow
+    pn = new_index.pn  # fill high-water: post-rebuild pn is ~always zero
     due = pi.needs_rebuild(new_index)
     new_index, incr = jax.lax.cond(
         due,
         lambda i: (pi.rebuild(i), pi.incremental_fits(i) & ~i.overflow),
         lambda i: (i, jnp.array(False)),
         new_index)
-    return new_index, found, val, ovf, due, incr
+    return new_index, found, val, ovf, due, incr, pn
+
+
+@jax.jit
+def _step_recover(index, ops, keys, vals):
+    """Breaker-replay variant of ``_step_single``: rebuild unconditionally.
+
+    During recovery the pending buffer must end every replayed window
+    empty — the quarantined windows were the ones that overflowed it, and
+    the ordinary 3/4 threshold leaves enough residue to re-trip on the
+    very next window.  Off the fast path by definition (it only traces
+    and runs after a breaker trip), so the extra rebuilds cost nothing in
+    steady state.
+    """
+    new_index, (found, val) = pi.execute_impl(index, ops, keys, vals)
+    ovf = new_index.overflow
+    pn = new_index.pn
+    new_index = pi.rebuild(new_index)
+    return new_index, found, val, ovf, pn
+
+
+# the breaker's forced reclaim: merge the pending buffer into storage and
+# re-spread the slack, leaving the full pending capacity available for the
+# quarantined windows' replay
+_repack = jax.jit(pi._rebuild_repack)
 
 
 @dataclasses.dataclass
@@ -105,6 +144,7 @@ class WindowResult:
     t_retired: float
     rebuilt: bool
     rebuilt_incremental: bool = False  # rebuild took the segmented fast tier
+    pending_fill: float = float("nan")  # pn high-water / pending_capacity
 
     def per_arrival(self) -> Dict[int, Tuple[bool, int]]:
         """qid → (found, val), fanning shared slots back out to arrivals."""
@@ -127,6 +167,11 @@ class _InFlight:
     rebuilt: jnp.ndarray
     incr: Optional[jnp.ndarray]     # rebuild tier taken (None: sharded path)
     dropped: Optional[jnp.ndarray]  # sharded routing drops (None: local)
+    pn: Optional[jnp.ndarray] = None  # pending fill high-water (pre-rebuild)
+    # index state BEFORE this window's execute — free to keep because
+    # _step_single doesn't donate; the breaker rolls back to it on a trip.
+    # Only retained when the breaker is armed (it pins device memory).
+    pre_index: Optional[object] = None
 
 
 class Dispatcher:
@@ -137,6 +182,7 @@ class Dispatcher:
                  capacity_factor: float = 2.0,
                  metrics: Optional[PipelineMetrics] = None,
                  durability=None,
+                 overload: Optional[OverloadConfig] = None,
                  clock=time.perf_counter):
         if isinstance(index, dist.ShardedPIIndex) and mesh is None:
             raise ValueError("a ShardedPIIndex needs its mesh for routing")
@@ -151,9 +197,24 @@ class Dispatcher:
         # the WAL seq of the last state-affecting window; the WAL append
         # itself happens earlier, at the collector's seal hook
         self.durability = durability
+        # overload tier (pipeline.overload.OverloadConfig): with a breaker
+        # armed, a local pending overflow recovers (rollback + repack +
+        # replay) instead of poisoning.  None keeps the legacy contract —
+        # overflow latches immediately — as does the sharded path, whose
+        # fence-bucket drops have no rollback point (the all_to_all already
+        # scattered the window).
+        self.overload = overload
         self._clock = clock
         self._inflight: List[_InFlight] = []
         self._poisoned: Optional[BaseException] = None
+        self._breaker = BREAKER_CLOSED
+        self._trip_times: List[float] = []
+        self._read_only_since: Optional[float] = None
+        self.breaker_trips = 0
+        self.breaker_recoveries = 0
+        cfg = index.shards.config if isinstance(index, dist.ShardedPIIndex) \
+            else index.config
+        self._pending_capacity = int(cfg.pending_capacity)
 
     @property
     def index(self):
@@ -165,25 +226,73 @@ class Dispatcher:
         """The latched retirement failure, if any (see ``_retire_front``)."""
         return self._poisoned
 
+    @property
+    def breaker_state(self) -> str:
+        """Where the breaker sits in closed → recovering → read_only →
+        poisoned.  ``recovering`` is only visible from within a recovery
+        (e.g. a durability hook); callers see the settled state.  Reading
+        the state applies the time-based read-only decay, so an admission
+        tier shedding writes on this state (never submitting a write
+        window) still sees the breaker close after a quiet interval."""
+        if self._poisoned is not None:
+            return BREAKER_POISONED
+        self._read_only_active()
+        return self._breaker
+
+    def _read_only_active(self) -> bool:
+        """Whether read-only mode is still in force, applying quiet decay:
+        a full ``recovery_interval`` without a trip closes the breaker
+        (the overload that drove the trips has passed)."""
+        if self._breaker != BREAKER_READ_ONLY:
+            return False
+        if self._clock() - self._read_only_since \
+                >= self.overload.recovery_interval:
+            self.reset_breaker()
+            return False
+        return True
+
+    def reset_breaker(self):
+        """Operator override: close a read-only breaker and forget trips.
+
+        A latched poisoning is *not* resettable — it means data was lost
+        or recovery itself failed, so the index state cannot be trusted.
+        """
+        if self._poisoned is not None:
+            raise RuntimeError(
+                "cannot reset a poisoned dispatcher: the failure was "
+                "unrecoverable, the index state is not trustworthy")
+        self._breaker = BREAKER_CLOSED
+        self._trip_times.clear()
+        self._read_only_since = None
+
     # -- execution ---------------------------------------------------------
 
     def _step(self, ops, keys, vals):
         """One execute + rebuild-if-due → (found, val, ovf, rebuilt, incr,
-        drop)."""
+        drop, pn)."""
         if isinstance(self._index, dist.ShardedPIIndex):
             state, (found, val), _, dropped = dist.execute_sharded(
                 self._index, self._mesh, ops, keys, vals,
                 capacity_factor=self.capacity_factor)
+            pn = jnp.max(state.shards.pn)  # hottest shard's fill high-water
             shards, ovf, rebuilt = dist.maybe_rebuild_shards(state.shards)
             self._index = dist.ShardedPIIndex(
                 shards=shards, fences=state.fences, n_shards=state.n_shards)
             incr = None
             dropped = jnp.sum(dropped)
         else:
-            self._index, found, val, ovf, rebuilt, incr = _step_single(
+            self._index, found, val, ovf, rebuilt, incr, pn = _step_single(
                 self._index, ops, keys, vals)
             dropped = None
-        return found, val, ovf, rebuilt, incr, dropped
+        return found, val, ovf, rebuilt, incr, dropped, pn
+
+    def _window_has_writes(self, window: Window) -> bool:
+        occ = window.occupancy
+        return bool(np.any(np.asarray(window.ops[:occ]) != SEARCH))
+
+    def _breaker_armed(self) -> bool:
+        return (self.overload is not None and self.overload.breaker
+                and not isinstance(self._index, dist.ShardedPIIndex))
 
     def submit(self, window: Window) -> List[WindowResult]:
         """Dispatch a sealed window; retire whatever exceeds the depth.
@@ -192,11 +301,21 @@ class Dispatcher:
         callers can stream results without a separate polling loop.
         """
         self._check_poisoned()
-        found, val, ovf, rebuilt, incr, dropped = self._step(
+        if self._read_only_active() and self._window_has_writes(window):
+            if self.metrics is not None:
+                self.metrics.read_only_rejections += window.n_arrivals
+            raise ReadOnlyModeError(
+                f"dispatcher is read-only after {self.breaker_trips} "
+                f"breaker trips: window with writes rejected (searches "
+                f"still serve).  Retry after the breaker closes, or "
+                f"reset_breaker() to override.")
+        pre = self._index if self._breaker_armed() else None
+        found, val, ovf, rebuilt, incr, dropped, pn = self._step(
             jnp.asarray(window.ops), jnp.asarray(window.keys),
             jnp.asarray(window.vals))
         self._inflight.append(
-            _InFlight(window, found, val, ovf, rebuilt, incr, dropped))
+            _InFlight(window, found, val, ovf, rebuilt, incr, dropped,
+                      pn=pn, pre_index=pre))
         if self.durability is not None:
             # the new index state reflects every window up to and
             # including this one, so window.seq is its WAL position
@@ -258,7 +377,16 @@ class Dispatcher:
 
     def _check_poisoned(self):
         if self._poisoned is not None:
-            raise self._poisoned
+            # fresh instance per raise: re-raising the latched object would
+            # grow its traceback on every call (each raise appends frames
+            # to the same __traceback__), so long-lived callers polling a
+            # poisoned dispatcher would accumulate unbounded tracebacks.
+            # The original — with the traceback of the actual failure —
+            # rides along as __cause__.
+            e = self._poisoned
+            fresh = type(e)(*e.args)
+            fresh.windows = getattr(e, "windows", [])
+            raise fresh from e
 
     def _retire_front(self) -> WindowResult:
         """Retire the oldest in-flight window; latch any data-loss error.
@@ -266,17 +394,109 @@ class Dispatcher:
         A failed retirement means the index state already reflects an
         execute that lost queries — every later window was dispatched
         against that corrupted state, so silently continuing would
-        propagate the loss.  The failure poisons the dispatcher (further
-        ``submit``/``flush`` re-raise it), the failing window stays
-        in-flight, and the exception's ``windows`` lists it plus every
-        window queued behind it, so the caller can replay them elsewhere.
+        propagate the loss.  With a breaker armed (``overload.breaker``,
+        local index) a pending overflow is instead *recovered*: see
+        ``_breaker_recover``.  Otherwise — or when recovery itself fails —
+        the failure poisons the dispatcher (further ``submit``/``flush``
+        re-raise it), the failing window stays in-flight, and the
+        exception's ``windows`` lists it plus every window queued behind
+        it, so the caller can replay them elsewhere.
         """
         try:
             res = self._retire(self._inflight[0])
-        except (PendingOverflowError, DispatchOverflowError) as e:
+        except PendingOverflowError as e:
+            if self._breaker_armed() and self._inflight[0].pre_index \
+                    is not None:
+                return self._breaker_recover(e)
             e.windows = [f.window for f in self._inflight]
             self._poisoned = e
             raise
+        except DispatchOverflowError as e:
+            e.windows = [f.window for f in self._inflight]
+            self._poisoned = e
+            raise
+        self._inflight.pop(0)
+        return res
+
+    def _breaker_recover(self, cause: PendingOverflowError) -> WindowResult:
+        """Recover from a pending overflow: rollback → repack → replay.
+
+        The overflowing execute dropped net inserts, so the post-execute
+        state is corrupt — but the state *before* the failing window is
+        still on device (``pre_index``; nothing is donated), and every
+        window that executed after it is still in flight with its inputs
+        intact.  Roll back, force a full repack (empties the pending
+        buffer — the resource that overflowed), and replay every
+        quarantined window through the always-rebuild recovery step.  A
+        replay that overflows *from an empty pending buffer* is a
+        geometry error (one window nets more inserts than the whole
+        buffer) and latches poisoned for real.
+
+        Escalation: recoveries inside one rolling ``recovery_interval``
+        beyond ``max_recoveries`` degrade the breaker to read-only; a trip
+        while *already* read-only means the degraded mode failed to
+        protect the index and latches poisoned (the state machine's final
+        arrow) — after the recovery completes, so the state stays
+        consistent for a post-mortem.
+        """
+        ocfg = self.overload
+        now = self._clock()
+        self.breaker_trips += 1
+        self._trip_times.append(now)
+        if self.metrics is not None:
+            self.metrics.breaker_trips += 1
+        was_read_only = self._breaker == BREAKER_READ_ONLY
+        self._breaker = BREAKER_RECOVERING
+        quarantined = self._inflight
+        self._inflight = []
+        self._index = _repack(quarantined[0].pre_index)
+        for i, f in enumerate(quarantined):
+            w = f.window
+            self._index, found, val, ovf, pn = _step_recover(
+                self._index, jnp.asarray(w.ops), jnp.asarray(w.keys),
+                jnp.asarray(w.vals))
+            if bool(ovf):  # syncs, but recovery is off the fast path anyway
+                err = PendingOverflowError(
+                    f"unrecoverable overflow: window nets more inserts than "
+                    f"the entire pending buffer even after a repack "
+                    f"(occupancy {w.occupancy} vs pending_capacity "
+                    f"{self._pending_capacity}) — geometry error, grow "
+                    f"PIConfig.pending_capacity above the window batch")
+                err.windows = [g.window for g in quarantined[i:]]
+                self._poisoned = err
+                raise err from cause
+            self._inflight.append(
+                _InFlight(w, found, val, ovf, jnp.array(True), None, None,
+                          pn=pn, pre_index=None))
+        self.breaker_recoveries += 1
+        if self.metrics is not None:
+            self.metrics.breaker_recoveries += 1
+        if self.durability is not None and quarantined[-1].window.seq \
+                is not None:
+            # the quarantined windows were WAL'd before dispatch, so no
+            # acked op can be lost — but a snapshot taken between the
+            # corrupt execute and this recovery would capture pre-rollback
+            # state.  A fresh blocking snapshot at the replayed frontier
+            # supersedes it.
+            self.durability.snapshot(self._index,
+                                     seq=quarantined[-1].window.seq)
+        if was_read_only:
+            err = PendingOverflowError(
+                "overflow while the breaker was already read-only: the "
+                "degraded mode failed to protect the index.  State was "
+                "recovered (no data lost) but serving halts — the workload "
+                "is beyond what this geometry can absorb.")
+            err.windows = []
+            self._poisoned = err
+            raise err from cause
+        self._trip_times = [t for t in self._trip_times
+                            if now - t <= ocfg.recovery_interval]
+        if len(self._trip_times) > ocfg.max_recoveries:
+            self._breaker = BREAKER_READ_ONLY
+            self._read_only_since = now
+        else:
+            self._breaker = BREAKER_CLOSED
+        res = self._retire(self._inflight[0])
         self._inflight.pop(0)
         return res
 
@@ -298,7 +518,10 @@ class Dispatcher:
                            t_retired=self._clock(),
                            rebuilt=bool(infl.rebuilt),
                            rebuilt_incremental=(
-                               infl.incr is not None and bool(infl.incr)))
+                               infl.incr is not None and bool(infl.incr)),
+                           pending_fill=(
+                               int(infl.pn) / self._pending_capacity
+                               if infl.pn is not None else float("nan")))
         if self.metrics is not None:
             self.metrics.on_retire(res)
         return res

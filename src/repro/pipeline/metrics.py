@@ -72,8 +72,24 @@ class PipelineMetrics:
     recovery_replayed: int = 0  # WAL windows replayed by recover()
     occupancy_sum: int = 0
     triggers: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # overload tier (DESIGN.md §8) — fed by the admission/deadline
+    # controllers and the dispatcher's circuit breaker
+    shed_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
+    retry_scheduled: int = 0    # shed arrivals re-enqueued with backoff
+    retry_exhausted: int = 0    # shed arrivals that ran out of retries
+    breaker_trips: int = 0      # pending overflows the breaker caught
+    breaker_recoveries: int = 0  # trips recovered via rollback+repack+replay
+    read_only_rejections: int = 0  # arrivals in windows refused read-only
+    deadline_current: float = float("nan")  # deadline in force (controller)
+    deadline_updates: int = 0   # times the controller retuned the deadline
+    pending_fill_peak: float = 0.0  # high-water pending fill across windows
     t_start: Optional[float] = None
     t_stop: Optional[float] = None
+
+    def on_shed(self, cls: str, n: int = 1):
+        """Count ``n`` arrivals shed under class ``cls`` (admission-time)."""
+        if n:
+            self.shed_by_class[cls] = self.shed_by_class.get(cls, 0) + n
 
     def start(self, now: float):
         self.t_start = now
@@ -92,6 +108,9 @@ class PipelineMetrics:
         self.n_rebuilds_incremental += int(
             getattr(res, "rebuilt_incremental", False))
         self.triggers[w.trigger] = self.triggers.get(w.trigger, 0) + 1
+        fill = getattr(res, "pending_fill", None)
+        if fill is not None and not np.isnan(fill):
+            self.pending_fill_peak = max(self.pending_fill_peak, float(fill))
         self.hist.record(res.latencies())
 
     # -- readout -----------------------------------------------------------
@@ -118,6 +137,16 @@ class PipelineMetrics:
             "wal_fsyncs": self.wal_fsyncs,
             "recovery_replayed": self.recovery_replayed,
             "triggers": dict(self.triggers),
+            "shed_by_class": dict(self.shed_by_class),
+            "shed_total": sum(self.shed_by_class.values()),
+            "retry_scheduled": self.retry_scheduled,
+            "retry_exhausted": self.retry_exhausted,
+            "breaker_trips": self.breaker_trips,
+            "breaker_recoveries": self.breaker_recoveries,
+            "read_only_rejections": self.read_only_rejections,
+            "deadline_current": self.deadline_current,
+            "deadline_updates": self.deadline_updates,
+            "pending_fill_peak": self.pending_fill_peak,
             "qps": (self.n_arrivals / wall) if wall else None,
             "p50_ms": self.hist.percentile(50) * 1e3,
             "p95_ms": self.hist.percentile(95) * 1e3,

@@ -78,10 +78,21 @@ class Durability:
     def __init__(self, directory: str, index, *,
                  fsync: str = "per_window", fsync_interval: float = 0.05,
                  snapshot_every: int = 0, keep: int = 3,
-                 segment_bytes: int = 1 << 22, metrics=None):
+                 segment_bytes: int = 1 << 22, metrics=None,
+                 async_snapshots: bool = False):
         self.dir = directory
         self.snapshot_every = snapshot_every
         self.metrics = metrics
+        # serving-path mode: periodic maybe_snapshot saves go through the
+        # CheckpointManager's background thread instead of blocking the
+        # tick.  WAL truncation is deferred until the next save (or close)
+        # confirms the previous one landed — truncating behind a snapshot
+        # that later fails would lose the only way to rebuild.  Write
+        # errors surface via the manager's latched-exception contract at
+        # the next save/wait.  The initial step-0 snapshot and explicit
+        # snapshot() calls stay blocking regardless.
+        self.async_snapshots = async_snapshots
+        self._truncate_pending = False
         if isinstance(index, dist.ShardedPIIndex):
             self.kind = "sharded"
             self.n_shards = index.n_shards
@@ -134,7 +145,8 @@ class Durability:
         """Dispatcher post-submit hook: snapshot every N windows."""
         if (self.snapshot_every and seq is not None
                 and seq - (self._last_snap or 0) >= self.snapshot_every):
-            self.snapshot(index, seq=seq)
+            self.snapshot(index, seq=seq,
+                          blocking=not self.async_snapshots)
 
     def snapshot(self, index, *, seq: Optional[int] = None,
                  blocking: bool = True):
@@ -143,23 +155,46 @@ class Durability:
         ``seq`` must be the sequence number of the last window already
         applied to ``index`` — recovery replays strictly-greater records
         on top.  After a blocking save the WAL is truncated behind the
-        oldest snapshot the checkpoint GC kept."""
+        oldest snapshot the checkpoint GC kept; a non-blocking save defers
+        both the truncation and its own error surfacing to the next
+        save/close (``CheckpointManager.save`` waits for — and re-raises
+        from — the previous background save before starting a new one).
+        """
         if seq is None:
             seq = self.wal.last_seq
+        prev_pending = self._truncate_pending
         self.ckpt.save(seq, _snapshot_tree(index), blocking=blocking,
                        meta={"wal_seq": seq, "kind": self.kind})
         self._last_snap = seq
         if blocking:
-            steps = self.ckpt.all_steps()
-            if steps:
-                self.wal.truncate_through(min(steps))
+            self._truncate()
+        else:
+            if prev_pending:
+                # save() joined the previous background save (and would
+                # have re-raised its failure), so the snapshot that
+                # deferred this truncation is confirmed on disk; the save
+                # now in flight is invisible to all_steps() until its
+                # manifest lands, so it cannot be truncated against
+                self._truncate()
+            self._truncate_pending = True
+
+    def _truncate(self):
+        """GC WAL segments behind the oldest kept snapshot."""
+        self._truncate_pending = False
+        steps = self.ckpt.all_steps()
+        if steps:
+            self.wal.truncate_through(min(steps))
 
     def close(self):
         self.ckpt.wait()
+        if self._truncate_pending:
+            # the wait() above confirmed every async save landed, so the
+            # deferred truncation is safe now
+            self._truncate()
         self.wal.close()
 
 
-def recover(directory: str, *, mesh=None, metrics=None
+def recover(directory: str, *, mesh=None, metrics=None, overload=None
             ) -> Tuple[object, List[WalRecord]]:
     """Rebuild the index from the latest snapshot + the WAL tail.
 
@@ -173,6 +208,13 @@ def recover(directory: str, *, mesh=None, metrics=None
     Raises ``RecoveryError`` when the directory has no metadata or no
     complete snapshot, and ``WalCorruptionError`` on interior log damage
     (a torn tail is repaired-by-exclusion, not an error).
+
+    ``overload`` (an ``OverloadConfig``) arms the replay dispatcher's
+    circuit breaker.  The default ``None`` keeps the bit-identical
+    guarantee unconditionally; with a breaker, a replay that trips it is
+    recovered the same way the live run would have been — logically
+    identical (same results, same logical contents), byte-identical only
+    when the live run tripped at the same windows.
     """
     meta_path = os.path.join(directory, META_NAME)
     if not os.path.exists(meta_path):
@@ -202,7 +244,7 @@ def recover(directory: str, *, mesh=None, metrics=None
 
     tail = [r for r in read_wal(os.path.join(directory, "wal"))
             if r.seq > step]
-    disp = Dispatcher(index, mesh=mesh, depth=0)
+    disp = Dispatcher(index, mesh=mesh, depth=0, overload=overload)
     for rec in tail:
         disp.submit(record_window(rec))
     if metrics is not None:

@@ -15,6 +15,7 @@ every crash point.
 import contextlib
 import os
 import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,7 @@ from repro.core import distributed as dist
 from repro.pipeline import (Collector, Dispatcher, Durability,
                             PipelineMetrics, RecoveryError, Window,
                             WindowConfig, recover)
+from repro import faults
 from faultpoints import FAULT_POINTS, SimulatedCrash, crash_at
 from test_query_pipeline import final_pairs
 
@@ -329,6 +331,141 @@ def test_fsync_off_recovery_still_prefix_consistent(tmp_path):
     n_applied = step + len(replayed)
     assert n_applied <= len(sealed)
     assert trees_equal(index, fresh_replay("single", sealed[:n_applied]))
+
+
+# ---------------------------------------------------------------------------
+# async snapshots (the serving path's non-stalling maybe_snapshot)
+# ---------------------------------------------------------------------------
+
+SNAP_SLEEP = 0.5  # how long each snapshot write is forced to take
+
+
+@contextlib.contextmanager
+def slow_ckpt_writes(delay: float = SNAP_SLEEP):
+    """Stretch every snapshot write to ``delay`` seconds — in whichever
+    thread performs it.  This is the probe that separates a blocking save
+    (the triggering submit eats the delay) from a background one (the
+    submit returns immediately; close() joins the writer later)."""
+    def hook(point):
+        if point == "ckpt.mid_write":
+            time.sleep(delay)
+    prev = faults.set_fault_hook(hook)
+    try:
+        yield
+    finally:
+        faults.set_fault_hook(prev)
+
+
+def _drive_timed_snapshots(d, *, async_snapshots, n=96, batch=16,
+                           snapshot_every=4):
+    """Drive a durable pipeline under slow snapshot writes.
+
+    Returns (per-seq submit wall times, sealed window copies, final
+    index).  Geometry: 6 windows, exactly one periodic snapshot (seq 4) —
+    the next multiple (8) is past the stream, so no later submit can
+    stall joining the background save; only ``close()`` does.
+    """
+    index, _, _ = seeded("single")
+    t, ops, keys, vals = mk_stream(n, seed=23)
+    dur = Durability(d, index, fsync="per_window",
+                     snapshot_every=snapshot_every,
+                     async_snapshots=async_snapshots)
+    sealed = []
+
+    def hook(win):
+        sealed.append(copy_window(win))
+        dur.on_seal(win)
+
+    col = Collector(WindowConfig(batch=batch), on_seal=hook)
+    disp = Dispatcher(index, depth=0, durability=dur)
+    times = {}
+
+    def timed_submit(w):
+        t0 = time.perf_counter()
+        disp.submit(w)
+        times[w.seq] = time.perf_counter() - t0
+
+    with slow_ckpt_writes():
+        for s in range(0, n, batch):
+            e = min(n, s + batch)
+            _, sl = col.offer_many(t[s:e], ops[s:e], keys[s:e],
+                                   vals[s:e], np.arange(s, e))
+            for w in sl:
+                timed_submit(w)
+        tail = col.take()
+        if tail is not None:
+            timed_submit(tail)
+        disp.flush()
+        dur.close()
+    return times, sealed, disp.index
+
+
+def test_async_snapshot_does_not_stall_the_serving_tick(tmp_path):
+    """The satellite contract: with ``async_snapshots`` the submit that
+    triggers a periodic snapshot returns without eating the write, while
+    the blocking mode demonstrably stalls that same submit — and the
+    background snapshot still lands intact (recovery is bit-identical)."""
+    d_async = str(tmp_path / "async")
+    times, sealed, final = _drive_timed_snapshots(d_async,
+                                                  async_snapshots=True)
+    assert times[4] < SNAP_SLEEP / 2, \
+        f"snapshot-triggering submit stalled {times[4]:.3f}s in async mode"
+    index, replayed = recover(d_async)
+    assert trees_equal(index, final)
+    assert trees_equal(index, fresh_replay("single", sealed))
+
+    d_block = str(tmp_path / "block")
+    times_b, _, _ = _drive_timed_snapshots(d_block, async_snapshots=False)
+    assert times_b[4] >= SNAP_SLEEP, \
+        "blocking mode should have eaten the snapshot write in submit"
+
+
+def test_async_snapshot_error_surfaces_at_close_and_loses_nothing(tmp_path):
+    """A background snapshot failure is latched, re-raised at the next
+    wait point (close), and — because WAL truncation is deferred until a
+    later save confirms the previous one landed — costs zero durability:
+    the full tail still replays over the intact initial snapshot."""
+    d = str(tmp_path)
+    index, _, _ = seeded("single")
+    t, ops, keys, vals = mk_stream(96, seed=29)
+    # create first: the initial step-0 snapshot is blocking and must
+    # succeed before the failing hook goes in
+    dur = Durability(d, index, fsync="per_window", snapshot_every=4,
+                     async_snapshots=True)
+    sealed = []
+
+    def seal_hook(win):
+        sealed.append(copy_window(win))
+        dur.on_seal(win)
+
+    col = Collector(WindowConfig(batch=16), on_seal=seal_hook)
+    disp = Dispatcher(index, depth=0, durability=dur)
+
+    def fail_hook(point):
+        if point == "ckpt.mid_write":
+            raise SimulatedCrash(point)
+
+    prev = faults.set_fault_hook(fail_hook)
+    try:
+        for s in range(0, 96, 16):
+            _, sl = col.offer_many(t[s:s + 16], ops[s:s + 16],
+                                   keys[s:s + 16], vals[s:s + 16],
+                                   np.arange(s, s + 16))
+            for w in sl:
+                disp.submit(w)   # seq-4 snapshot fails in the background
+        tail = col.take()
+        if tail is not None:
+            disp.submit(tail)
+        disp.flush()
+        with pytest.raises(SimulatedCrash):
+            dur.close()
+    finally:
+        faults.set_fault_hook(prev)
+    step = CheckpointManager(os.path.join(d, "ckpt")).latest_step()
+    assert step == 0, "the failed background snapshot must not publish"
+    index2, replayed = recover(d)
+    assert len(replayed) == len(sealed)
+    assert trees_equal(index2, fresh_replay("single", sealed))
 
 
 # ---------------------------------------------------------------------------

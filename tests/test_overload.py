@@ -1,0 +1,568 @@
+"""Overload control: shed/retry/retune/recover vs the RefIndex oracle.
+
+The overload contract (DESIGN.md §8): under pressure the pipeline may
+*refuse* work — never lose it.  Every acknowledged op is applied exactly
+once (the admitted subsequence replayed against ``RefIndex`` must match
+bit-for-bit), every shed op is counted by class and either retried or
+reported dropped, the circuit breaker converts pending overflow into
+rollback+repack+replay with results identical to a never-overflowed run,
+and read-only degradation rejects writes with a typed error while
+searches keep serving.
+"""
+import itertools
+import math
+import types
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DELETE, INSERT, SEARCH, PIConfig, RefIndex, build
+from repro.pipeline import (ArrivalConfig, BREAKER_CLOSED, BREAKER_POISONED,
+                            BREAKER_READ_ONLY, Collector, Dispatcher,
+                            OverloadConfig, OverloadController,
+                            PROCESSES, PendingOverflowError, PipelineMetrics,
+                            ReadOnlyModeError, RetryPolicy, SHED_SEARCH,
+                            SHED_SEARCH_DUP, SHED_WRITE, TRIGGER_DEADLINE,
+                            TRIGGER_SIZE, WindowConfig, make_arrivals)
+from repro.pipeline.overload import AdmissionController, DeadlineController
+from repro import data as data_mod
+from test_query_pipeline import final_pairs
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+def fresh_index(pc=96, capacity=4096, key_space=1 << 20, n0=64, seed=1):
+    cfg = PIConfig(capacity=capacity, pending_capacity=pc, fanout=4)
+    rng = np.random.default_rng(seed)
+    keys0 = np.unique(rng.integers(1, key_space, n0).astype(np.int32))
+    vals0 = rng.integers(0, 1000, keys0.size).astype(np.int32)
+    idx = build(cfg, jnp.asarray(keys0), jnp.asarray(vals0))
+    return idx, RefIndex.build(keys0, vals0)
+
+
+def insert_stream(n, start=2_000_000):
+    """n distinct inserts — every op nets a pending slot (overflow fuel).
+    Keys start above every ``fresh_index`` key space, so they never
+    collide with seeded keys."""
+    return types.SimpleNamespace(
+        t=np.arange(n, dtype=np.float64),
+        ops=np.full(n, INSERT, np.int32),
+        keys=(start + np.arange(n)).astype(np.int32),
+        vals=np.arange(n, dtype=np.int32))
+
+
+def check_admitted_against_oracle(rep, ref, stream):
+    """Zero acked-op loss: the admitted subsequence, replayed in admission
+    order against the oracle, reproduces every acknowledged result and
+    the final index state; every arrival is acked or reported dropped."""
+    adm = np.asarray(rep.admitted, dtype=np.int64)
+    assert sorted(rep.results) == sorted(rep.admitted)
+    ref_results = ref.execute(stream.ops[adm], stream.keys[adm],
+                              stream.vals[adm])
+    for j, qid in enumerate(adm.tolist()):
+        found, val = rep.results[qid]
+        if stream.ops[qid] == SEARCH:
+            assert (val if found else None) == ref_results[j], f"query {qid}"
+        elif stream.ops[qid] == DELETE:
+            assert found == (ref_results[j] is not None), f"delete {qid}"
+    acked, dropped = set(rep.results), set(rep.dropped)
+    assert not acked & dropped
+    assert acked | dropped == set(range(len(stream.t))), \
+        "an arrival vanished without being acked or reported shed"
+
+
+def mk_window(pairs, t0=0.0, batch=16):
+    """Seal a window of (op, key, val) triples."""
+    col = Collector(WindowConfig(batch=batch))
+    for i, (op, k, v) in enumerate(pairs):
+        assert col.offer(t0 + i * 1e-6, op, k, v, i)
+    return col.take()
+
+
+# ---------------------------------------------------------------------------
+# tentpole: shedding under every workload generator, zero acked-op loss
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("process", PROCESSES)
+def test_overload_sheds_then_recovers_zero_acked_loss(process):
+    """A burst overdriving the pending buffer sheds (counted per class),
+    retries re-admit what fits, and everything acknowledged is oracle-
+    exact — under every arrival generator."""
+    idx, ref = fresh_index(pc=96, key_space=2048, n0=64)
+    acfg = ArrivalConfig(process=process, rate=1e4, n_arrivals=3000,
+                         hot_keys=4, hot_frac=0.8, seed=3)
+    keys = np.unique(np.random.default_rng(7)
+                     .integers(1, 2048, 512).astype(np.int32))
+    stream = make_arrivals(acfg, data_mod.YCSBConfig(write_ratio=0.6,
+                                                     theta=0.9), keys)
+    m = PipelineMetrics()
+    ocfg = OverloadConfig(shed_dup_at=0.15, shed_search_at=0.3,
+                          shed_write_at=0.95, max_recoveries=10_000,
+                          adapt_deadline=False)
+    disp = Dispatcher(idx, depth=1, metrics=m, overload=ocfg,
+                      clock=lambda: 0.0)
+    col = Collector(WindowConfig(batch=48, deadline=5.0))
+    ctl = OverloadController(ocfg, metrics=m,
+                             retry=RetryPolicy(max_retries=2), seed=9)
+    rep = ctl.run(disp, col, stream, chunk=48)
+
+    s = m.summary()
+    assert s["shed_total"] > 0, "the burst never drove shedding"
+    assert s["shed_total"] == len(rep.dropped) + rep.retries
+    assert m.pending_fill_peak >= ocfg.shed_dup_at
+    assert disp.breaker_state == BREAKER_CLOSED, "did not recover"
+    # the acked story must be exact, shed or not
+    check_admitted_against_oracle(rep, ref, stream)
+    assert final_pairs(disp.index) == ref.data
+    assert rep.goodput > 0 and rep.goodput == len(rep.admitted)
+
+
+def test_shedding_prefers_duplicate_searches_then_searches_then_writes():
+    """The shed ladder: at moderate pressure only duplicate SEARCHes go;
+    writes survive until the very top."""
+    cfg = OverloadConfig(shed_dup_at=0.2, shed_search_at=0.5,
+                         shed_write_at=0.8)
+    ops = np.array([SEARCH, SEARCH, INSERT, DELETE], np.int32)
+    dup = np.array([True, False, False, False])
+
+    def at_pressure(p):
+        adm = AdmissionController(cfg)
+        adm.observe(types.SimpleNamespace(pending_fill=p))
+        return adm.plan(ops, dup)
+
+    keep, masks = at_pressure(0.1)
+    assert keep.all(), "no shedding below every threshold"
+    keep, masks = at_pressure(0.3)
+    assert list(keep) == [False, True, True, True]
+    assert masks[SHED_SEARCH_DUP].sum() == 1 and not masks[SHED_WRITE].any()
+    keep, masks = at_pressure(0.6)
+    assert list(keep) == [False, False, True, True], \
+        "searches shed before writes"
+    assert masks[SHED_SEARCH].sum() == 2
+    keep, masks = at_pressure(0.9)
+    assert not keep.any(), "top of the ladder sheds everything"
+    assert masks[SHED_WRITE].sum() == 2
+
+
+def test_pressure_ewma_survives_rebuild_sawtooth():
+    """One spike keeps pressure up across later low-fill windows (EWMA),
+    instead of oscillating at the rebuild period."""
+    adm = AdmissionController(OverloadConfig(pressure_ewma=0.3))
+    adm.observe(types.SimpleNamespace(pending_fill=1.0))
+    adm.observe(types.SimpleNamespace(pending_fill=0.0))
+    assert 0.3 < adm.pressure < 1.0, "EWMA memory lost after one window"
+    for _ in range(30):
+        adm.observe(types.SimpleNamespace(pending_fill=0.0))
+    assert adm.pressure < 0.05, "pressure never decays"
+
+
+def test_shed_ops_never_in_wal(tmp_path):
+    """Shedding is admission-time only: a WAL'd (sealed) op is never shed
+    — every WAL record's qids are a subset of the admitted set."""
+    from repro.pipeline import Durability, read_wal, record_window
+    idx, ref = fresh_index(pc=96, key_space=2048)
+    keys = np.unique(np.random.default_rng(7)
+                     .integers(1, 2048, 512).astype(np.int32))
+    stream = make_arrivals(
+        ArrivalConfig(process="hotkey", rate=1e4, n_arrivals=1500, seed=3),
+        data_mod.YCSBConfig(write_ratio=0.6), keys)
+    m = PipelineMetrics()
+    ocfg = OverloadConfig(shed_dup_at=0.15, shed_search_at=0.3,
+                          max_recoveries=10_000, adapt_deadline=False)
+    dur = Durability(str(tmp_path), idx, fsync="per_window")
+    col = Collector(WindowConfig(batch=48), on_seal=dur.on_seal)
+    disp = Dispatcher(idx, depth=1, metrics=m, overload=ocfg,
+                      durability=dur, clock=lambda: 0.0)
+    rep = OverloadController(ocfg, metrics=m, seed=9).run(
+        disp, col, stream, chunk=48)
+    dur.close()
+    assert m.summary()["shed_total"] > 0
+    walled = [q for r in read_wal(str(tmp_path / "wal"))
+              for q in record_window(r).qids]
+    # everything sealed to the WAL reached a window — it was executed
+    # (admitted), or bounced read-only and later dropped; a shed op never
+    # got as far as the log
+    assert set(walled) - set(rep.admitted) <= set(rep.dropped)
+    assert set(rep.admitted) <= set(walled), \
+        "an executed window escaped the write-ahead log"
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker: quarantine → rollback → repack → replay
+# ---------------------------------------------------------------------------
+
+def test_breaker_recovers_2x_pending_capacity_bit_identical():
+    """The acceptance scenario: a stream of distinct inserts at 2× the
+    pending capacity completes without poisoning, and both the per-query
+    results and the final state are identical to a run whose pending
+    buffer never overflowed."""
+    pc = 64
+    stream = insert_stream(2 * pc + 32)
+    m = PipelineMetrics()
+    # seed big enough that the 15%-churn rebuild trigger stays quiet —
+    # pending fill must accumulate across windows to overflow
+    idx, _ = fresh_index(pc=pc, n0=1024)
+    disp = Dispatcher(idx, depth=1, metrics=m,
+                      overload=OverloadConfig(max_recoveries=50))
+    res = disp.run(stream, collector=Collector(WindowConfig(batch=40)),
+                   chunk=40)
+    assert disp.breaker_trips >= 1, "the stream never overflowed"
+    assert disp.breaker_recoveries == disp.breaker_trips
+    assert disp.breaker_state == BREAKER_CLOSED
+    assert disp.poisoned is None
+    assert m.summary()["breaker_trips"] == disp.breaker_trips
+
+    big, _ = fresh_index(pc=1024, n0=1024)
+    clean = Dispatcher(big, depth=1)
+    res2 = clean.run(stream, collector=Collector(WindowConfig(batch=40)),
+                     chunk=40)
+    assert clean.breaker_trips == 0
+    r1, r2 = {}, {}
+    for r in res:
+        r1.update(r.per_arrival())
+    for r in res2:
+        r2.update(r.per_arrival())
+    assert r1 == r2, "recovered results diverged from the clean run"
+    assert len(r1) == len(stream.t), "an admitted op was lost or doubled"
+    assert final_pairs(disp.index) == final_pairs(clean.index)
+
+
+def test_breaker_default_off_preserves_legacy_poisoning():
+    """Without an OverloadConfig the original contract stands: one
+    overflow latches the dispatcher."""
+    pc = 64
+    stream = insert_stream(2 * pc + 32)
+    idx, _ = fresh_index(pc=pc, n0=1024)
+    disp = Dispatcher(idx, depth=1)
+    with pytest.raises(PendingOverflowError):
+        disp.run(stream, collector=Collector(WindowConfig(batch=40)),
+                 chunk=40)
+    assert disp.poisoned is not None
+    assert disp.breaker_state == BREAKER_POISONED
+
+
+def test_breaker_geometry_error_still_poisons():
+    """A single window netting more inserts than the whole pending buffer
+    cannot be recovered by any repack — the breaker must latch poisoned,
+    not loop."""
+    cfg = PIConfig(capacity=64, pending_capacity=8, fanout=4)
+    idx = build(cfg, jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32))
+    disp = Dispatcher(idx, depth=0,
+                      overload=OverloadConfig(max_recoveries=50))
+    w = mk_window([(INSERT, 100 + i, i) for i in range(32)], batch=32)
+    with pytest.raises(PendingOverflowError, match="geometry"):
+        disp.submit(w)
+    assert disp.breaker_state == BREAKER_POISONED
+    assert disp.breaker_trips == 1 and disp.breaker_recoveries == 0
+
+
+def test_breaker_escalates_to_read_only_then_decays():
+    """Trips beyond max_recoveries inside the rolling interval degrade to
+    read-only: writes bounce with ReadOnlyModeError, searches serve; a
+    quiet interval closes the breaker again."""
+    now = [0.0]
+    pc = 64
+    idx, ref = fresh_index(pc=pc, n0=1024)
+    disp = Dispatcher(idx, depth=0, clock=lambda: now[0],
+                      overload=OverloadConfig(max_recoveries=0,
+                                              recovery_interval=10.0))
+    # two 40-insert windows: the second overflows (40+40 > 64), recovery
+    # succeeds, and max_recoveries=0 sends the breaker straight read-only
+    s = insert_stream(80)
+    for lo in (0, 40):
+        disp.submit(mk_window(
+            [(INSERT, int(s.keys[i]), int(s.vals[i])) for i in
+             range(lo, lo + 40)], batch=40))
+    disp.flush()
+    assert disp.breaker_trips == 1 and disp.breaker_recoveries == 1
+    assert disp.breaker_state == BREAKER_READ_ONLY
+
+    wr = mk_window([(INSERT, 2_500_000, 5)], batch=4)
+    with pytest.raises(ReadOnlyModeError):
+        disp.submit(wr)
+    # searches still serve, and serve correctly
+    some_key = int(next(iter(ref.data)))
+    res = disp.submit(mk_window([(SEARCH, some_key, 0)], batch=4))
+    (r,) = res
+    found, val = r.per_arrival()[0]
+    assert found and val == ref.data[some_key]
+
+    # quiet decay: past the rolling interval the breaker closes and the
+    # same write window is accepted
+    now[0] = 11.0
+    disp.submit(wr)
+    disp.flush()
+    assert disp.breaker_state == BREAKER_CLOSED
+    assert final_pairs(disp.index)[2_500_000] == 5
+
+
+def test_reset_breaker_overrides_read_only_but_not_poisoned():
+    now = [0.0]
+    idx, _ = fresh_index(pc=64, n0=1024)
+    disp = Dispatcher(idx, depth=0, clock=lambda: now[0],
+                      overload=OverloadConfig(max_recoveries=0))
+    s = insert_stream(80)
+    for lo in (0, 40):
+        disp.submit(mk_window(
+            [(INSERT, int(s.keys[i]), int(s.vals[i])) for i in
+             range(lo, lo + 40)], batch=40))
+    disp.flush()
+    assert disp.breaker_state == BREAKER_READ_ONLY
+    disp.reset_breaker()
+    assert disp.breaker_state == BREAKER_CLOSED
+    disp.submit(mk_window([(INSERT, 2_500_001, 7)], batch=4))
+    disp.flush()
+
+    cfg = PIConfig(capacity=64, pending_capacity=8, fanout=4)
+    bad = Dispatcher(build(cfg, jnp.zeros((0,), jnp.int32),
+                           jnp.zeros((0,), jnp.int32)),
+                     depth=0, overload=OverloadConfig())
+    with pytest.raises(PendingOverflowError):
+        bad.submit(mk_window([(INSERT, 100 + i, i) for i in range(32)],
+                             batch=32))
+    with pytest.raises(RuntimeError, match="poisoned"):
+        bad.reset_breaker()
+
+
+def test_overload_controller_reschedules_read_only_bounced_writes():
+    """Writes refused during read-only mode are not lost: the driver backs
+    them off and re-admits them after the quiet interval closes the
+    breaker (each dispatcher clock read advances one unit here, standing
+    in for real quiet time passing between retries)."""
+    clk = itertools.count()
+    pc = 64
+    idx, ref = fresh_index(pc=pc, n0=1024)
+    m = PipelineMetrics()
+    ocfg = OverloadConfig(max_recoveries=0, recovery_interval=5.0,
+                          shed=False, adapt_deadline=False)
+    disp = Dispatcher(idx, depth=0, metrics=m, overload=ocfg,
+                      clock=lambda: float(next(clk)))
+    col = Collector(WindowConfig(batch=40))
+    # 3 windows of distinct inserts: window 2 trips the breaker (→
+    # read-only with max_recoveries=0); window 3's writes are refused,
+    # rescheduled, and eventually land once the breaker decays closed
+    stream = insert_stream(120)
+    ctl = OverloadController(ocfg, metrics=m,
+                             retry=RetryPolicy(max_retries=20,
+                                               backoff_base=2.0,
+                                               jitter=0.0))
+    rep = ctl.run(disp, col, stream, chunk=40)
+    assert disp.breaker_trips == 1
+    assert m.shed_by_class.get(SHED_WRITE, 0) > 0, \
+        "no write was ever refused while read-only"
+    assert not rep.dropped, "refused writes must be retried, not dropped"
+    assert disp.breaker_state == BREAKER_CLOSED
+    check_admitted_against_oracle(rep, ref, stream)
+    assert final_pairs(disp.index) == ref.data
+
+
+# ---------------------------------------------------------------------------
+# adaptive deadline controller
+# ---------------------------------------------------------------------------
+
+def _mk_col(deadline, batch=32):
+    return Collector(WindowConfig(batch=batch, deadline=deadline))
+
+
+def _res(occ, trigger, lat=0.001):
+    return types.SimpleNamespace(
+        window=types.SimpleNamespace(occupancy=occ, trigger=trigger),
+        latencies=lambda: np.full(max(occ, 1), lat),
+        pending_fill=0.0)
+
+
+def test_deadline_controller_grows_on_empty_deadline_seals():
+    cfg = OverloadConfig(adjust_every=4, hysteresis=2, deadline_step=2.0,
+                         deadline_max=1.0, fill_low=0.5)
+    col = _mk_col(0.01)
+    ctl = DeadlineController(cfg, col)
+    for _ in range(8):  # two agreeing intervals → one grow step
+        ctl.observe(_res(4, TRIGGER_DEADLINE))
+    assert col.deadline == pytest.approx(0.02)
+    assert ctl.trajectory[-1][1] == pytest.approx(0.02)
+
+
+def test_deadline_controller_shrinks_on_slo_violation():
+    cfg = OverloadConfig(adjust_every=4, hysteresis=2, deadline_step=2.0,
+                         latency_slo=0.05, deadline_min=0.001)
+    col = _mk_col(0.08)
+    ctl = DeadlineController(cfg, col)
+    for _ in range(8):
+        ctl.observe(_res(32, TRIGGER_SIZE, lat=0.2))  # p99 ≫ slo
+    assert col.deadline == pytest.approx(0.04)
+
+
+def test_deadline_controller_hysteresis_blocks_single_interval_noise():
+    cfg = OverloadConfig(adjust_every=4, hysteresis=2, deadline_step=2.0)
+    col = _mk_col(0.01)
+    ctl = DeadlineController(cfg, col)
+    for _ in range(4):
+        ctl.observe(_res(4, TRIGGER_DEADLINE))     # one grow vote
+    for _ in range(4):
+        ctl.observe(_res(32, TRIGGER_SIZE))        # neutral interval
+    for _ in range(4):
+        ctl.observe(_res(4, TRIGGER_DEADLINE))     # lone vote again
+    assert col.deadline == pytest.approx(0.01), \
+        "a single interval's vote must not move the deadline"
+
+
+def test_deadline_controller_clamps_to_bounds():
+    cfg = OverloadConfig(adjust_every=1, hysteresis=1, deadline_step=10.0,
+                         deadline_min=0.004, deadline_max=0.05,
+                         latency_slo=0.05)
+    col = _mk_col(0.01)
+    ctl = DeadlineController(cfg, col)
+    for _ in range(5):
+        ctl.observe(_res(1, TRIGGER_DEADLINE))
+    assert col.deadline == pytest.approx(0.05), "grow must clamp at max"
+    for _ in range(5):
+        ctl.observe(_res(32, TRIGGER_SIZE, lat=1.0))
+    assert col.deadline == pytest.approx(0.004), "shrink must clamp at min"
+
+
+def test_deadline_controller_infinite_deadline_only_shrinks():
+    cfg = OverloadConfig(adjust_every=1, hysteresis=1, deadline_max=0.5,
+                         latency_slo=0.01)
+    col = _mk_col(math.inf)
+    ctl = DeadlineController(cfg, col)
+    ctl.observe(_res(4, TRIGGER_DEADLINE))  # grow vote: no-op at inf
+    assert math.isinf(col.deadline)
+    ctl.observe(_res(32, TRIGGER_SIZE, lat=1.0))  # slo violated
+    assert col.deadline == pytest.approx(0.5), \
+        "first shrink from inf lands on deadline_max"
+
+
+def test_deadline_retunes_on_diurnal_workload():
+    """The ROADMAP scenario: a diurnal stream's lulls seal windows by
+    deadline nearly empty; the controller must demonstrably retune, and
+    the metrics must record it."""
+    idx, _ = fresh_index(pc=1024, key_space=1 << 14, n0=256)
+    keys = np.unique(np.random.default_rng(3)
+                     .integers(1, 1 << 14, 4096).astype(np.int32))
+    stream = make_arrivals(
+        ArrivalConfig(process="diurnal", rate=2e3, n_arrivals=4000,
+                      period=0.5, swing=0.95, seed=5),
+        data_mod.YCSBConfig(write_ratio=0.2), keys)
+    m = PipelineMetrics()
+    ocfg = OverloadConfig(shed=False, breaker=False, adjust_every=4,
+                          hysteresis=2, deadline_min=1e-3, deadline_max=0.5,
+                          deadline_step=2.0, fill_low=0.5)
+    disp = Dispatcher(idx, depth=1, metrics=m, clock=lambda: 0.0)
+    col = Collector(WindowConfig(batch=64, deadline=0.002))
+    ctl = OverloadController(ocfg, metrics=m)
+    ctl.run(disp, col, stream, chunk=64)
+    assert m.deadline_updates >= 1, "controller never retuned"
+    traj = ctl.deadline_controller.trajectory
+    assert len(traj) >= 2 and traj[-1][1] != traj[0][1]
+    assert m.deadline_current == pytest.approx(col.deadline)
+    assert ocfg.deadline_min <= col.deadline <= ocfg.deadline_max
+
+
+def test_collector_set_deadline_validates_and_applies():
+    col = _mk_col(1.0, batch=4)
+    with pytest.raises(ValueError):
+        col.set_deadline(0.0)
+    assert col.offer(0.0, INSERT, 1, 1, 0)
+    col.set_deadline(0.25)
+    assert col.deadline == 0.25
+    # the open window is judged against the new deadline immediately
+    assert not col.offer(0.5, INSERT, 2, 2, 1), \
+        "shrunk deadline must seal the already-old window"
+    assert col.take(0.5).trigger == TRIGGER_DEADLINE
+
+
+# ---------------------------------------------------------------------------
+# poisoned-exception hygiene (regression)
+# ---------------------------------------------------------------------------
+
+def test_poisoned_dispatcher_raises_fresh_chained_exceptions():
+    """Regression: ``_check_poisoned`` used to re-raise the SAME latched
+    exception object, whose ``__traceback__`` grew by the raise-site
+    frames on every poll — an unbounded leak for a long-lived caller
+    polling a poisoned dispatcher.  Every raise must be a fresh instance
+    carrying the original failure as ``__cause__``."""
+    cfg = PIConfig(capacity=64, pending_capacity=8, fanout=4)
+    idx = build(cfg, jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32))
+    disp = Dispatcher(idx, depth=0)
+    with pytest.raises(PendingOverflowError) as e0:
+        disp.submit(mk_window([(INSERT, 100 + i, i) for i in range(32)],
+                              batch=32))
+    original = disp.poisoned
+    assert e0.value is original, "the first raise is the failure itself"
+    assert original.windows, "the failing window must ride the exception"
+
+    def tb_len(exc):
+        n, tb = 0, exc.__traceback__
+        while tb is not None:
+            n, tb = n + 1, tb.tb_next
+        return n
+
+    orig_tb = tb_len(original)
+    raised = []
+    for _ in range(3):
+        with pytest.raises(PendingOverflowError) as ei:
+            disp.submit(mk_window([(SEARCH, 1, 0)], batch=4))
+        raised.append(ei.value)
+    for e in raised:
+        assert e is not original, "latched exception re-raised verbatim"
+        assert e.__cause__ is original
+        assert e.args == original.args
+        assert e.windows == original.windows
+    assert len({id(e) for e in raised}) == 3
+    assert tb_len(original) == orig_tb, \
+        "the latched exception's traceback grew across raises"
+    assert tb_len(raised[0]) == tb_len(raised[2]), \
+        "per-raise tracebacks must not accumulate"
+    with pytest.raises(PendingOverflowError) as ef:
+        disp.flush()
+    assert ef.value is not original and ef.value.__cause__ is original
+
+
+# ---------------------------------------------------------------------------
+# retry policy
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_backoff_and_jitter_bounds():
+    pol = RetryPolicy(max_retries=3, backoff_base=0.01, backoff_factor=2.0,
+                      jitter=0.2)
+    rng = np.random.default_rng(0)
+    d0 = [pol.next_delay(0, 0.05, rng) for _ in range(200)]
+    d2 = [pol.next_delay(2, 0.05, rng) for _ in range(200)]
+    assert all(0.05 * 0.8 <= d <= 0.05 * 1.2 for d in d0)
+    assert all(0.2 * 0.8 <= d <= 0.2 * 1.2 for d in d2)
+    # hint below the floor: the floor wins
+    assert RetryPolicy(jitter=0.0).next_delay(0, 1e-9, rng) \
+        == pytest.approx(1e-3)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_factor=0.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=1.5)
+
+
+def test_retry_exhaustion_is_counted_and_reported():
+    """With zero retries every shed op is dropped, reported, and counted."""
+    idx, ref = fresh_index(pc=96, key_space=2048)
+    keys = np.unique(np.random.default_rng(7)
+                     .integers(1, 2048, 512).astype(np.int32))
+    stream = make_arrivals(
+        ArrivalConfig(process="hotkey", rate=1e4, n_arrivals=1500, seed=3),
+        data_mod.YCSBConfig(write_ratio=0.6), keys)
+    m = PipelineMetrics()
+    ocfg = OverloadConfig(shed_dup_at=0.15, shed_search_at=0.3,
+                          max_recoveries=10_000, adapt_deadline=False)
+    disp = Dispatcher(idx, depth=1, metrics=m, overload=ocfg,
+                      clock=lambda: 0.0)
+    rep = OverloadController(ocfg, metrics=m,
+                             retry=RetryPolicy(max_retries=0)).run(
+        disp, Collector(WindowConfig(batch=48)), stream, chunk=48)
+    assert rep.retries == 0
+    assert len(rep.dropped) > 0
+    assert m.retry_exhausted == len(rep.dropped)
+    assert m.summary()["shed_total"] == len(rep.dropped)
+    check_admitted_against_oracle(rep, ref, stream)
+    assert final_pairs(disp.index) == ref.data
