@@ -82,9 +82,12 @@ def replay_stream(disp, col, stream, *, bulk: bool = True,
     # and numpy scalar boxing would double it
     ops, keys, vals = (stream.ops.tolist(), stream.keys.tolist(),
                        stream.vals.tolist())
+    k2 = getattr(stream, "keys2", None)
+    keys2 = k2.tolist() if k2 is not None else [0] * len(stream)
     offer = col.offer
     for i in range(len(stream)):
-        while not offer(clock(), ops[i], keys[i], vals[i], i):
+        while not offer(clock(), ops[i], keys[i], vals[i], i,
+                        key2=keys2[i]):
             retired += submit(take(clock()))
     tail = take(clock())
     if tail is not None:

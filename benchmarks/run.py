@@ -8,7 +8,8 @@ import time
 
 from benchmarks import (fig6_dataset_size, fig7_batch_size, fig8_scalability,
                         fig9_mixed, fig10_skew, fig14_range, fig15_breakdown,
-                        fig_pipeline, fig_rebuild, model_check)
+                        fig_pipeline, fig_range_pipeline, fig_rebuild,
+                        model_check)
 
 # every figure's emit() also writes a machine-readable BENCH_<fig>.json
 # (rows + backend + scenario config) into BENCH_DIR (default: cwd) — that
@@ -22,6 +23,7 @@ ALL = {
     "fig14": fig14_range.main,
     "fig15": fig15_breakdown.main,
     "pipeline": fig_pipeline.main,
+    "range": fig_range_pipeline.main,
     "rebuild": fig_rebuild.main,
     "model": model_check.main,
 }

@@ -169,6 +169,23 @@ print(f"overload smoke ok in {time.time() - t0:.1f}s: "
       f"bit-identical results")
 EOF
 
+  echo "--- range serving smoke (fig_range_pipeline, tiny sizes) ---"
+  BENCH_DIR="$(mktemp -d)" python - <<'EOF'
+import time
+from benchmarks.fig_range_pipeline import main
+
+t0 = time.time()
+rows = main(n_keys=1 << 10, batch=64, n_arrivals=512)
+qps = {(r[1], r[2]): r[3] for r in rows}
+for scen in ("uniform", "hotscan"):
+    assert qps[(scen, "windowed")] > qps[(scen, "naive")], \
+        f"windowed fused range path regressed below per-op replay: {rows}"
+# main() itself asserts the replay ran from one compiled range execute
+print(f"range smoke ok in {time.time() - t0:.1f}s: "
+      f"uniform {qps[('uniform', 'windowed')] / qps[('uniform', 'naive')]:.1f}x, "
+      f"hotscan {qps[('hotscan', 'windowed')] / qps[('hotscan', 'naive')]:.1f}x")
+EOF
+
   echo "--- segmented rebuild smoke (fig_rebuild, tiny sizes) ---"
   BENCH_DIR="$(mktemp -d)" python - <<'EOF'
 import time

@@ -8,7 +8,7 @@ Public surface:
   rebalance_from_load / rebalance_from_sample            (NUMA analogue)
   RefIndex                                               (oracle)
 """
-from repro.core.batch import SEARCH, INSERT, DELETE
+from repro.core.batch import SEARCH, INSERT, DELETE, RANGE
 from repro.core.engine import BACKENDS, Probe, SearchEngine, get_engine
 from repro.core.index import (
     PIConfig, PIIndex, build, empty, execute, execute_impl,
@@ -27,7 +27,8 @@ from repro.core.rebalance import (
 from repro.core.ref import RefIndex
 
 __all__ = [
-    "SEARCH", "INSERT", "DELETE", "PIConfig", "PIIndex", "build", "empty",
+    "SEARCH", "INSERT", "DELETE", "RANGE", "PIConfig", "PIIndex", "build",
+    "empty",
     "execute", "execute_impl", "execute_trace_count", "incremental_fits",
     "live_items", "lookup", "traverse",
     "rebuild", "maybe_rebuild", "needs_rebuild", "range_agg", "search_batch",

@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-SEARCH, INSERT, DELETE = 0, 1, 2
+SEARCH, INSERT, DELETE, RANGE = 0, 1, 2, 3
 
 
 def _seg_combine(a, b):

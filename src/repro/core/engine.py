@@ -44,6 +44,7 @@ import functools
 
 import jax.numpy as jnp
 
+from repro.kernels.pi_range import pi_range
 from repro.kernels.pi_search import (FLAG_MAIN_MATCH, FLAG_PENDING_HIT,
                                      pi_probe, pi_search, sentinel_for)
 
@@ -105,6 +106,59 @@ class SearchEngine:
         if self.uses_pallas:
             return self._probe_pallas(index, q)
         return self._probe_xla(index, q)
+
+    def range_agg(self, index, lo: jnp.ndarray, hi: jnp.ndarray,
+                  max_span: int):
+        """Batched range aggregation → (count, sum) over keys in [lo, hi].
+
+        The walk advances through *occupied ranks*, not raw slots: a
+        rank→slot table skips segment slack so ``max_span`` counts real
+        keys (live + tombstoned, matching the pre-gapped dense layout's
+        budget), and tombstones are gated out of the aggregate.  Both
+        Pallas backends run ``kernels.pi_range`` — descent + rank walk +
+        pending pass fused into one launch; the ``xla`` path computes the
+        identical values with stock jnp, so backends stay bit-identical
+        (int32 aggregation is exact and order-independent).
+        """
+        kdt = index.keys.dtype
+        sent = sentinel_for(kdt)
+        lo = lo.astype(kdt)
+        hi = hi.astype(kdt)
+        C = index.keys.shape[0]
+        # occupied-rank tables: rank[slot] = #occupied slots at-or-before
+        # slot (minus one); dense2slot[r] = slot of the r-th occupied key,
+        # C past the end.  Tombstoned slots keep their key => occupied.
+        occ = index.keys != sent
+        rank = jnp.cumsum(occ.astype(jnp.int32)) - 1
+        tgt = jnp.where(occ, rank, C)
+        dense2slot = jnp.full((C,), C, jnp.int32).at[tgt].set(
+            jnp.arange(C, dtype=jnp.int32), mode="drop")
+        pidx = jnp.arange(index.pkeys.shape[0])
+        plive = (pidx < index.pn) & ~index.ptomb
+        if self.uses_pallas:
+            live = (occ & ~index.tomb).astype(jnp.int32)
+            return pi_range(
+                index.keys, live, index.vals, rank, dense2slot,
+                index.pkeys, index.pvals, plive.astype(jnp.int32), lo, hi,
+                fanout=index.config.fanout, max_span=max_span,
+                tile_q=self.tile_q, interpret=self.interpret,
+                levels=index.levels)
+        pos = self.floor(index, lo)
+        r0 = jnp.where(pos >= 0, jnp.take(rank, jnp.clip(pos, 0, C - 1)), 0)
+        r = r0[:, None] + jnp.arange(max_span, dtype=jnp.int32)[None, :]
+        slot = jnp.take(dense2slot, r, mode="fill", fill_value=C)
+        ks = jnp.take(index.keys, slot, mode="fill", fill_value=sent)
+        ts = jnp.take(index.tomb, slot, mode="fill", fill_value=True)
+        vs = jnp.take(index.vals, slot, mode="fill", fill_value=0)
+        inr = (ks >= lo[:, None]) & (ks <= hi[:, None]) & ~ts & (ks != sent)
+        cnt = jnp.sum(inr, axis=1).astype(jnp.int32)
+        sm = jnp.sum(jnp.where(inr, vs, 0), axis=1)
+        # pending buffer: broadcast compare (PC is small between rebuilds)
+        pin = (index.pkeys[None, :] >= lo[:, None]) & \
+            (index.pkeys[None, :] <= hi[:, None]) & plive[None, :]
+        cnt = cnt + jnp.sum(pin, axis=1).astype(jnp.int32)
+        sm = sm + jnp.sum(jnp.where(pin, index.pvals[None, :], 0), axis=1)
+        return cnt, sm
 
     # -- xla backend -------------------------------------------------------
 

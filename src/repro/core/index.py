@@ -691,33 +691,20 @@ def range_agg(index: PIIndex, lo: jnp.ndarray, hi: jnp.ndarray,
               max_span: int = 1024):
     """Batched range query → (count, sum_of_vals) over keys in [lo, hi].
 
-    Walks up to ``max_span`` storage slots from the interception of ``lo``
-    (the paper's storage-layer scan), plus a broadcast pass over the pending
-    buffer.  ``max_span`` is the benchmark's 'granularity' cap; on the
-    segmented gapped layout it counts *slots*, so segment slack inside the
-    walked window consumes span budget without contributing keys.
+    Walks up to ``max_span`` *occupied* slots from the interception of
+    ``lo`` (the paper's storage-layer scan), plus a broadcast pass over
+    the pending buffer.  On the segmented gapped layout the walk advances
+    through occupied ranks — segment slack inside the walked window never
+    consumes span budget, so ``max_span`` counts real keys exactly as it
+    did on the pre-gapped dense layout (tombstoned slots keep their key
+    and rank, hence still consume budget, but are gated out of the
+    aggregate).  Dispatches ``SearchEngine.range_agg``: the ``xla``
+    backend computes it with stock jnp; both Pallas backends fuse descent
+    + rank walk + pending pass into one ``kernels.pi_range`` launch.
     """
     kdt = index.keys.dtype
-    sent = _sentinel(kdt)
-    lo = lo.astype(kdt)
-    hi = hi.astype(kdt)
-    pos = traverse(index, lo)           # floor(lo): scan starts here
-    start = jnp.maximum(pos, 0)
-    span = start[:, None] + jnp.arange(max_span, dtype=jnp.int32)[None, :]
-    ks = jnp.take(index.keys, span, mode="fill", fill_value=sent)
-    ts = jnp.take(index.tomb, span, mode="fill", fill_value=True)
-    vs = jnp.take(index.vals, span, mode="fill", fill_value=0)
-    inr = (ks >= lo[:, None]) & (ks <= hi[:, None]) & ~ts & (ks != sent)
-    cnt = jnp.sum(inr, axis=1).astype(jnp.int32)
-    sm = jnp.sum(jnp.where(inr, vs, 0), axis=1)
-    # pending buffer: broadcast compare (PC is small between rebuilds)
-    pidx = jnp.arange(index.pkeys.shape[0])
-    plive = (pidx < index.pn) & ~index.ptomb
-    pin = (index.pkeys[None, :] >= lo[:, None]) & \
-        (index.pkeys[None, :] <= hi[:, None]) & plive[None, :]
-    cnt = cnt + jnp.sum(pin, axis=1).astype(jnp.int32)
-    sm = sm + jnp.sum(jnp.where(pin, index.pvals[None, :], 0), axis=1)
-    return cnt, sm
+    return get_engine(index.config).range_agg(
+        index, lo.astype(kdt), hi.astype(kdt), max_span)
 
 
 # convenience wrappers ------------------------------------------------------

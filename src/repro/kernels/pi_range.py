@@ -1,0 +1,184 @@
+"""Pallas TPU kernel: fused batched range aggregation (paper §3.2.5).
+
+One launch per query tile fuses the three stages a range query needs:
+
+1. **scan-start descent** — the Alg. 2 BFS descent of ``pi_search`` runs
+   on the range's ``lo`` bound to find the floor slot where the storage
+   scan starts;
+2. **occupancy-rank walk** — instead of walking raw storage slots (where
+   segment slack would consume span budget without contributing keys, see
+   the gapped-layout invariants in ``core.index``), the walk advances
+   through *occupied ranks*: the engine precomputes ``rank`` (occupied
+   rank per slot) and ``dense2slot`` (rank → slot), so step ``j`` lands on
+   the ``j``-th occupied slot at-or-after the scan start and ``max_span``
+   counts real keys, not slots;
+3. **pending pass** — a broadcast liveness-gated compare over the sorted
+   pending buffer, same as the XLA reference.
+
+Aggregation is ``(count, sum_of_vals)`` per query — int32 adds, so the
+kernel is bit-identical to the XLA path by construction (integer addition
+is exact and order-independent).
+
+Tombstoned slots keep their keys and stay *occupied* (they hold a rank and
+consume span budget — matching the pre-gapped dense layout, where a
+tombstone occupied a dense slot), but the liveness gate keeps them out of
+the aggregate.  Padding query lanes use ``lo = sentinel, hi = 0`` so the
+in-range mask is empty and the lane is inert.
+
+Launch geometry mirrors ``pi_probe``: the level arrays, storage, rank
+tables and pending buffer broadcast to every grid step (VMEM-resident);
+the ``lo``/``hi`` query tiles and the two output tiles walk the grid.
+Validated in interpret mode on CPU (no TPU in this container).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.pi_search import (_descend, _pad_queries, _broadcast_spec,
+                                     pad_index_levels, pad_levels,
+                                     sentinel_for)
+
+
+def _range_kernel(*refs, num_levels: int, fanout: int, capacity: int,
+                  max_span: int, pending_capacity: int):
+    """One grid step: descent on lo + rank walk + pending pass for a tile.
+
+    refs = (top, ..., level1, storage, live, vals, rank, dense2slot,
+            pending, pvals, plive, lo_tile, hi_tile, cnt_tile, sum_tile)
+    """
+    *level_refs, storage_ref, live_ref, vals_ref, rank_ref, d2s_ref, \
+        pending_ref, pvals_ref, plive_ref, lo_ref, hi_ref, \
+        cnt_ref, sum_ref = refs
+    i32 = jnp.int32
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    levels = [ref[...] for ref in level_refs]
+    storage = storage_ref[...]
+    live = live_ref[...]
+    vals = vals_ref[...]
+    rank = rank_ref[...]
+    d2s = d2s_ref[...]
+    C = capacity
+
+    # stage 1: scan-start descent — floor(lo), then its occupied rank.
+    # Slack slots hold the sentinel (> any lo), so the floor is always a
+    # real key slot and its rank entry is the walk's starting rank.
+    pos, underflow = _descend(levels, storage, lo,
+                              num_levels=num_levels, fanout=fanout)
+    pos_c = jnp.clip(pos, 0, C - 1)
+    r0 = jnp.where(underflow, i32(0), jnp.take(rank, pos_c, mode="clip"))
+
+    # stage 2: walk max_span occupied ranks; rank -> slot via dense2slot.
+    def span_step(j, acc):
+        cnt, sm = acc
+        r = r0 + j
+        r_ok = r < C
+        slot = jnp.take(d2s, jnp.minimum(r, C - 1), mode="clip")
+        slot_ok = r_ok & (slot < C)          # d2s holds C past the last rank
+        slot_c = jnp.minimum(slot, C - 1)
+        ks = jnp.take(storage, slot_c, mode="clip")
+        lv = jnp.take(live, slot_c, mode="clip")
+        vs = jnp.take(vals, slot_c, mode="clip")
+        in_r = slot_ok & (ks >= lo) & (ks <= hi) & (lv > 0)
+        return (cnt + in_r.astype(i32), sm + jnp.where(in_r, vs, 0))
+
+    zeros = jnp.zeros(lo.shape, i32)
+    cnt, sm = jax.lax.fori_loop(0, max_span, span_step, (zeros, zeros))
+
+    # stage 3: pending pass — livenes-gated compare, one key per step so
+    # no (tile_q, PC) intermediate ever materializes in VMEM.
+    pending = pending_ref[...]
+    pvals = pvals_ref[...]
+    plive = plive_ref[...]
+
+    def pend_step(j, acc):
+        cnt, sm = acc
+        pk = jnp.take(pending, j, mode="clip")
+        in_p = (pk >= lo) & (pk <= hi) & \
+            (jnp.take(plive, j, mode="clip") > 0)
+        return (cnt + in_p.astype(i32),
+                sm + jnp.where(in_p, jnp.take(pvals, j, mode="clip"), 0))
+
+    cnt, sm = jax.lax.fori_loop(0, pending_capacity, pend_step, (cnt, sm))
+    cnt_ref[...] = cnt
+    sum_ref[...] = sm
+
+
+def pi_range(storage: jnp.ndarray, live: jnp.ndarray, vals: jnp.ndarray,
+             rank: jnp.ndarray, dense2slot: jnp.ndarray,
+             pending: jnp.ndarray, pvals: jnp.ndarray, plive: jnp.ndarray,
+             lo: jnp.ndarray, hi: jnp.ndarray, *, fanout: int = 8,
+             max_span: int = 1024, tile_q: int = 256,
+             interpret: bool = False,
+             levels: Sequence[jnp.ndarray] | None = None):
+    """Fused batched range aggregation, ONE launch per serving window.
+
+    Args:
+      storage:    (C,) sorted gapped storage keys, sentinel slack.
+      live:       (C,) int32 — 1 where the slot is occupied and not
+                  tombstoned (the aggregate gate).
+      vals:       (C,) int32 slot values.
+      rank:       (C,) int32 — occupied rank per slot (cumsum of occupancy
+                  minus one; arbitrary at slack slots, never gathered).
+      dense2slot: (C,) int32 — slot index of the r-th occupied slot, C
+                  past the last occupied rank.
+      pending:    (PC,) sorted pending keys, sentinel-padded.
+      pvals:      (PC,) pending values.
+      plive:      (PC,) int32 — 1 below the pending fill mark and not
+                  tombstoned.
+      lo, hi:     (B,) inclusive range bounds; any B (tile-padded with an
+                  inert lo=sentinel / hi=0 lane).
+      max_span:   occupied-key budget per query (NOT raw slots).
+      levels:     optional precomputed index levels (bottom-up, as on
+                  ``PIIndex.levels``); derived from storage when absent.
+    Returns:
+      (count, sum) — two (B,) int32 arrays.
+    """
+    sentinel = sentinel_for(storage.dtype)
+    C = storage.shape[0]
+    PC = pending.shape[0]
+    if levels is None:
+        levels, storage_p = pad_levels(storage, fanout, sentinel)
+    else:
+        levels, storage_p = pad_index_levels(levels, storage, fanout,
+                                             sentinel)
+    lo_p, B = _pad_queries(lo.astype(storage.dtype), tile_q, sentinel)
+    hi_p, _ = _pad_queries(hi.astype(storage.dtype), tile_q,
+                           storage.dtype.type(0))
+    Bp = lo_p.shape[0]
+    grid = (Bp // tile_q,)
+    num_levels = len(levels)
+
+    in_specs = [_broadcast_spec(lv) for lv in levels] + [
+        _broadcast_spec(storage_p),
+        _broadcast_spec(live),
+        _broadcast_spec(vals),
+        _broadcast_spec(rank),
+        _broadcast_spec(dense2slot),
+        _broadcast_spec(pending),
+        _broadcast_spec(pvals),
+        _broadcast_spec(plive),
+        pl.BlockSpec((tile_q,), lambda i: (i,)),
+        pl.BlockSpec((tile_q,), lambda i: (i,)),
+    ]
+    tile_spec = pl.BlockSpec((tile_q,), lambda i: (i,))
+
+    kernel = functools.partial(_range_kernel, num_levels=num_levels,
+                               fanout=fanout, capacity=C, max_span=max_span,
+                               pending_capacity=PC)
+    cnt, sm = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(tile_spec, tile_spec),
+        out_shape=tuple(jax.ShapeDtypeStruct((Bp,), jnp.int32)
+                        for _ in range(2)),
+        interpret=interpret,
+    )(*levels, storage_p, live, vals, rank, dense2slot, pending, pvals,
+      plive, lo_p, hi_p)
+    return cnt[:B], sm[:B]

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DELETE, INSERT, SEARCH, PIConfig, build
+from repro.core import DELETE, INSERT, RANGE, SEARCH, PIConfig, build
 from repro.models import make_decode_step, make_prefill_step
 from repro.models import decode as dec
 from repro.models.base import ModelConfig
@@ -153,6 +153,26 @@ class Server:
             found, val = per_qid[base + i]
             out[rid] = val if found else None
         return out
+
+    def session_range(self, lo: int, hi: int):
+        """Aggregate over live sessions with rid in ``[lo, hi]``.
+
+        One RANGE op through the same tick pipeline every point op rides
+        (collect → WAL when armed → fused range execute), so it shares the
+        compiled programs and the durability contract.  Returns
+        ``(count, slot_sum)`` — how many live rids fall in the interval
+        and the sum of their KV-cache slots.
+        """
+        now = time.perf_counter()
+        _, sealed = self._collector.offer_many(
+            np.full(1, now), np.asarray([RANGE], np.int32),
+            np.asarray([lo], np.int32), np.asarray([0], np.int32),
+            np.arange(1), keys2=np.asarray([hi], np.int32))
+        assert not sealed, "tick window sized to admit every tick op"
+        window = self._collector.take(now)
+        (result,) = self._dispatcher.submit(window)  # depth 0 → sync retire
+        self.queries_processed += 1
+        return result.per_arrival_ranges()[0]
 
     def admit(self, reqs: List[Request]):
         admits = []

@@ -29,10 +29,15 @@ it turns open-loop arrival streams into the static sorted batches
               controller retuning the collector online, and the circuit
               breaker the dispatcher uses to recover from pending
               overflow instead of poisoning
+  ranges      the range serving tier: RANGE(lo, hi) arrivals ride the same
+              collect → WAL → dispatch path as point ops (the window's
+              ``keys2`` lane), executed as ONE fused launch per window
+              against the pre-window index state, fence-routed and
+              (count, sum)-reduced when sharded
 
 See DESIGN.md §6 for the architecture, the bulk-admission contract and
-the backpressure contract, §7 for the durability contract, and §8 for
-the overload contract.
+the backpressure contract, §7 for the durability contract, §8 for the
+overload contract, and §9 for the range-serving contract.
 """
 from repro.pipeline.collector import (
     Collector, TRIGGER_DEADLINE, TRIGGER_FLUSH, TRIGGER_SIZE, Window,
@@ -45,8 +50,11 @@ from repro.pipeline.metrics import LatencyHistogram, PipelineMetrics
 from repro.pipeline.overload import (
     AdmissionController, BREAKER_CLOSED, BREAKER_POISONED, BREAKER_READ_ONLY,
     BREAKER_RECOVERING, DeadlineController, OverloadConfig,
-    OverloadController, ReadOnlyModeError, RunReport, SHED_SEARCH,
-    SHED_SEARCH_DUP, SHED_WRITE,
+    OverloadController, ReadOnlyModeError, RunReport, SHED_RANGE,
+    SHED_RANGE_SUB, SHED_SEARCH, SHED_SEARCH_DUP, SHED_WRITE,
+)
+from repro.pipeline.ranges import (
+    execute_ranges, execute_ranges_sharded, range_trace_count,
 )
 from repro.pipeline.recovery import Durability, RecoveryError, recover
 from repro.pipeline.wal import (
@@ -73,5 +81,7 @@ __all__ = [
     "DeadlineController", "RunReport", "ReadOnlyModeError",
     "BREAKER_CLOSED", "BREAKER_RECOVERING", "BREAKER_READ_ONLY",
     "BREAKER_POISONED",
-    "SHED_SEARCH_DUP", "SHED_SEARCH", "SHED_WRITE",
+    "SHED_RANGE_SUB", "SHED_SEARCH_DUP", "SHED_RANGE", "SHED_SEARCH",
+    "SHED_WRITE",
+    "execute_ranges", "execute_ranges_sharded", "range_trace_count",
 ]

@@ -51,12 +51,14 @@ import numpy as np
 
 from repro.core import distributed as dist
 from repro.core import index as pi
-from repro.core.batch import SEARCH
+from repro.core.batch import RANGE, SEARCH
+from repro.kernels.pi_search import sentinel_for
 from repro.pipeline.collector import Collector, Window, WindowConfig
 from repro.pipeline.metrics import PipelineMetrics
 from repro.pipeline.overload import (BREAKER_CLOSED, BREAKER_POISONED,
                                      BREAKER_READ_ONLY, BREAKER_RECOVERING,
                                      OverloadConfig, ReadOnlyModeError)
+from repro.pipeline.ranges import execute_ranges, execute_ranges_sharded
 
 
 class PendingOverflowError(RuntimeError):
@@ -145,12 +147,30 @@ class WindowResult:
     rebuilt: bool
     rebuilt_incremental: bool = False  # rebuild took the segmented fast tier
     pending_fill: float = float("nan")  # pn high-water / pending_capacity
+    rcnt: Optional[np.ndarray] = None  # (batch,) int32 RANGE counts
+    rsum: Optional[np.ndarray] = None  # (batch,) int32 RANGE value sums
 
     def per_arrival(self) -> Dict[int, Tuple[bool, int]]:
-        """qid → (found, val), fanning shared slots back out to arrivals."""
+        """qid → (found, val) for *point* arrivals, fanning shared slots
+        back out; RANGE arrivals read theirs from ``per_arrival_ranges``
+        (a (count, sum) pair is not a (found, val) pair)."""
         out = {}
+        ops = self.window.ops
         for qid, slot in zip(self.window.qids, self.window.slots):
-            out[qid] = (bool(self.found[slot]), int(self.val[slot]))
+            if ops[slot] != RANGE:
+                out[qid] = (bool(self.found[slot]), int(self.val[slot]))
+        return out
+
+    def per_arrival_ranges(self) -> Dict[int, Tuple[int, int]]:
+        """qid → (count, sum) for RANGE arrivals (coalesced pairs fan back
+        out to every arrival sharing the slot)."""
+        out = {}
+        if self.rcnt is None:
+            return out
+        ops = self.window.ops
+        for qid, slot in zip(self.window.qids, self.window.slots):
+            if ops[slot] == RANGE:
+                out[qid] = (int(self.rcnt[slot]), int(self.rsum[slot]))
         return out
 
     def latencies(self) -> np.ndarray:
@@ -168,6 +188,8 @@ class _InFlight:
     incr: Optional[jnp.ndarray]     # rebuild tier taken (None: sharded path)
     dropped: Optional[jnp.ndarray]  # sharded routing drops (None: local)
     pn: Optional[jnp.ndarray] = None  # pending fill high-water (pre-rebuild)
+    rcnt: Optional[jnp.ndarray] = None  # RANGE counts (pre-window state)
+    rsum: Optional[jnp.ndarray] = None  # RANGE value sums
     # index state BEFORE this window's execute — free to keep because
     # _step_single doesn't donate; the breaker rolls back to it on a trip.
     # Only retained when the breaker is armed (it pins device memory).
@@ -180,6 +202,7 @@ class Dispatcher:
     def __init__(self, index, *, mesh=None, depth: int = 1,
                  check_overflow: bool = True,
                  capacity_factor: float = 2.0,
+                 max_span: int = 1024,
                  metrics: Optional[PipelineMetrics] = None,
                  durability=None,
                  overload: Optional[OverloadConfig] = None,
@@ -191,6 +214,9 @@ class Dispatcher:
         self.depth = max(0, int(depth))
         self.check_overflow = check_overflow
         self.capacity_factor = capacity_factor
+        # occupied-key scan budget per RANGE (core.range_agg's max_span);
+        # static — it shapes the compiled range execute
+        self.max_span = int(max_span)
         self.metrics = metrics
         # durability tier (pipeline.recovery.Durability): submit() calls
         # maybe_snapshot after each dispatched window so snapshots stamp
@@ -288,7 +314,41 @@ class Dispatcher:
 
     def _window_has_writes(self, window: Window) -> bool:
         occ = window.occupancy
-        return bool(np.any(np.asarray(window.ops[:occ]) != SEARCH))
+        ops = np.asarray(window.ops[:occ])
+        return bool(np.any((ops != SEARCH) & (ops != RANGE)))
+
+    def _window_has_ranges(self, window: Window) -> bool:
+        if window.keys2 is None:  # pre-range producer: no range lane
+            return False
+        occ = window.occupancy
+        return bool(np.any(np.asarray(window.ops[:occ]) == RANGE))
+
+    @staticmethod
+    def _point_view(window: Window):
+        """The window's point-op image: RANGE lanes become sentinel
+        SEARCHes — the exact shape of a pad slot, so the single compiled
+        point execute serves range-bearing windows unchanged (and the
+        breaker's replay, being masked the same way, stays bit-identical).
+        Windows without ranges pass through untouched (zero-copy).
+        """
+        ops = np.asarray(window.ops)
+        is_r = ops == RANGE
+        if not is_r.any():
+            return window.ops, window.keys
+        keys = np.asarray(window.keys)
+        sent = sentinel_for(keys.dtype)
+        return (np.where(is_r, SEARCH, ops).astype(ops.dtype),
+                np.where(is_r, sent, keys).astype(keys.dtype))
+
+    def _execute_ranges(self, window: Window):
+        """One fused range launch against the PRE-window index state."""
+        ops = jnp.asarray(window.ops)
+        keys = jnp.asarray(window.keys)
+        keys2 = jnp.asarray(window.keys2)
+        if isinstance(self._index, dist.ShardedPIIndex):
+            return execute_ranges_sharded(self._index, ops, keys, keys2,
+                                          self.max_span)
+        return execute_ranges(self._index, ops, keys, keys2, self.max_span)
 
     def _breaker_armed(self) -> bool:
         return (self.overload is not None and self.overload.breaker
@@ -310,12 +370,20 @@ class Dispatcher:
                 f"still serve).  Retry after the breaker closes, or "
                 f"reset_breaker() to override.")
         pre = self._index if self._breaker_armed() else None
+        # ranges first, against the pre-execute state: every RANGE in the
+        # window observes the index as of the window boundary (DESIGN.md
+        # §9), which is what makes exact-pair coalescing across window
+        # writes sound.  Read-only, so failure-free w.r.t. the breaker.
+        rcnt = rsum = None
+        if self._window_has_ranges(window):
+            rcnt, rsum = self._execute_ranges(window)
+        ops, keys = self._point_view(window)
         found, val, ovf, rebuilt, incr, dropped, pn = self._step(
-            jnp.asarray(window.ops), jnp.asarray(window.keys),
+            jnp.asarray(ops), jnp.asarray(keys),
             jnp.asarray(window.vals))
         self._inflight.append(
             _InFlight(window, found, val, ovf, rebuilt, incr, dropped,
-                      pn=pn, pre_index=pre))
+                      pn=pn, rcnt=rcnt, rsum=rsum, pre_index=pre))
         if self.durability is not None:
             # the new index state reflects every window up to and
             # including this one, so window.seq is its WAL position
@@ -341,7 +409,8 @@ class Dispatcher:
         double-buffered submit.
 
         ``stream`` is anything with 1-D ``t/ops/keys/vals`` arrays (an
-        ``ArrivalStream``); arrival i's qid is its position i.  Admission
+        ``ArrivalStream``; an optional ``keys2`` array carries RANGE
+        upper bounds); arrival i's qid is its position i.  Admission
         goes through ``Collector.offer_many`` one ``chunk`` at a time
         (default: one window's worth) so window formation for chunk k+1
         overlaps the device executing chunk k — feeding the whole stream
@@ -360,13 +429,16 @@ class Dispatcher:
         step = chunk or col.cfg.batch
         n = len(stream.t)
         qids = np.arange(n)
+        keys2 = getattr(stream, "keys2", None)
         retired: List[WindowResult] = []
         for s in range(0, n, step):
             e = min(n, s + step)
             t = np.full(e - s, clock()) if clock is not None \
                 else stream.t[s:e]
             _, sealed = col.offer_many(t, stream.ops[s:e], stream.keys[s:e],
-                                       stream.vals[s:e], qids[s:e])
+                                       stream.vals[s:e], qids[s:e],
+                                       keys2[s:e] if keys2 is not None
+                                       else None)
             for w in sealed:
                 retired.extend(self.submit(w))
         tail = col.take(clock()) if clock is not None else col.take()
@@ -452,8 +524,15 @@ class Dispatcher:
         self._index = _repack(quarantined[0].pre_index)
         for i, f in enumerate(quarantined):
             w = f.window
+            # same point-view masking as the live submit; the original
+            # range results ride along untouched (ranges read the
+            # pre-window state, which the rollback restored — recomputing
+            # them against the repacked layout could only change
+            # max_span truncation, never correctness, so keeping the
+            # as-served values is the bit-identical choice)
+            ops, keys = self._point_view(w)
             self._index, found, val, ovf, pn = _step_recover(
-                self._index, jnp.asarray(w.ops), jnp.asarray(w.keys),
+                self._index, jnp.asarray(ops), jnp.asarray(keys),
                 jnp.asarray(w.vals))
             if bool(ovf):  # syncs, but recovery is off the fast path anyway
                 err = PendingOverflowError(
@@ -467,7 +546,7 @@ class Dispatcher:
                 raise err from cause
             self._inflight.append(
                 _InFlight(w, found, val, ovf, jnp.array(True), None, None,
-                          pn=pn, pre_index=None))
+                          pn=pn, rcnt=f.rcnt, rsum=f.rsum, pre_index=None))
         self.breaker_recoveries += 1
         if self.metrics is not None:
             self.metrics.breaker_recoveries += 1
@@ -521,7 +600,11 @@ class Dispatcher:
                                infl.incr is not None and bool(infl.incr)),
                            pending_fill=(
                                int(infl.pn) / self._pending_capacity
-                               if infl.pn is not None else float("nan")))
+                               if infl.pn is not None else float("nan")),
+                           rcnt=(np.asarray(infl.rcnt)
+                                 if infl.rcnt is not None else None),
+                           rsum=(np.asarray(infl.rsum)
+                                 if infl.rsum is not None else None))
         if self.metrics is not None:
             self.metrics.on_retire(res)
         return res

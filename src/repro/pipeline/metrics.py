@@ -15,6 +15,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.core.batch import RANGE
+
 
 class LatencyHistogram:
     """Log-bucketed latency histogram with percentile readout.
@@ -83,6 +85,13 @@ class PipelineMetrics:
     deadline_current: float = float("nan")  # deadline in force (controller)
     deadline_updates: int = 0   # times the controller retuned the deadline
     pending_fill_peak: float = 0.0  # high-water pending fill across windows
+    # range serving tier (DESIGN.md §9) — derived from the retired window
+    range_admitted: int = 0     # RANGE arrivals admitted (pre-coalescing)
+    range_slots: int = 0        # distinct RANGE result slots executed
+    range_coalesce_hits: int = 0  # RANGE arrivals that shared a queued slot
+    range_span_hist: LatencyHistogram = dataclasses.field(
+        default_factory=lambda: LatencyHistogram(1.0, 1e9, 96))
+    #   inclusive span (hi - lo + 1, key units) per distinct RANGE slot
     t_start: Optional[float] = None
     t_stop: Optional[float] = None
 
@@ -111,6 +120,21 @@ class PipelineMetrics:
         fill = getattr(res, "pending_fill", None)
         if fill is not None and not np.isnan(fill):
             self.pending_fill_peak = max(self.pending_fill_peak, float(fill))
+        keys2 = getattr(w, "keys2", None)
+        if keys2 is not None:
+            ops = np.asarray(w.ops)
+            is_r = ops[:w.occupancy] == RANGE
+            nr_slots = int(np.count_nonzero(is_r))
+            if nr_slots:
+                slots = np.asarray(w.slots)
+                nr_arr = int(np.count_nonzero(ops[slots] == RANGE))
+                self.range_admitted += nr_arr
+                self.range_slots += nr_slots
+                self.range_coalesce_hits += nr_arr - nr_slots
+                lo = np.asarray(w.keys)[:w.occupancy][is_r]
+                hi = np.asarray(keys2)[:w.occupancy][is_r]
+                self.range_span_hist.record(
+                    hi.astype(np.int64) - lo.astype(np.int64) + 1)
         self.hist.record(res.latencies())
 
     # -- readout -----------------------------------------------------------
@@ -147,6 +171,11 @@ class PipelineMetrics:
             "deadline_current": self.deadline_current,
             "deadline_updates": self.deadline_updates,
             "pending_fill_peak": self.pending_fill_peak,
+            "range_admitted": self.range_admitted,
+            "range_slots": self.range_slots,
+            "range_coalesce_hits": self.range_coalesce_hits,
+            "range_span_p50": self.range_span_hist.percentile(50),
+            "range_span_p99": self.range_span_hist.percentile(99),
             "qps": (self.n_arrivals / wall) if wall else None,
             "p50_ms": self.hist.percentile(50) * 1e3,
             "p95_ms": self.hist.percentile(95) * 1e3,

@@ -9,9 +9,11 @@ every today-fatal overload into measured, observable degradation
 
 * **Adaptive admission control** (``AdmissionController``): a pressure
   signal derived from the pending-buffer fill high-water of retired
-  windows drives a shed ladder ordered by information loss — duplicate
-  SEARCHes first (their result is already being computed for another
-  arrival), then all SEARCHes, and writes only at the top of the ladder.
+  windows drives a shed ladder ordered by information loss — subsumed
+  RANGEs first (a queued range already scans their keys), then duplicate
+  SEARCHes (their result is already being computed for another arrival),
+  then all RANGEs (each costs a span walk, not one probe), then all
+  SEARCHes, and writes only at the top of the ladder.
   Shedding happens strictly at admission time, *before* the window seals,
   so an op whose window already sealed to the WAL is never shed — the
   write-ahead contract is preserved by construction.  Shed arrivals get a
@@ -49,7 +51,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.batch import SEARCH
+from repro.core.batch import RANGE, SEARCH
 from repro.pipeline.collector import TRIGGER_DEADLINE
 from repro.pipeline.workload import RetryPolicy
 
@@ -61,7 +63,9 @@ BREAKER_READ_ONLY = "read_only"
 BREAKER_POISONED = "poisoned"
 
 # shed classes, cheapest information loss first
+SHED_RANGE_SUB = "range_sub"     # RANGE subsumed by a queued RANGE
 SHED_SEARCH_DUP = "search_dup"   # SEARCH duplicating a result already queued
+SHED_RANGE = "range"             # any RANGE (a span of work, not one probe)
 SHED_SEARCH = "search"           # any SEARCH
 SHED_WRITE = "write"             # INSERT/DELETE — shed last, and in read-only
 
@@ -80,15 +84,28 @@ class OverloadConfig:
 
     The shed thresholds are pressure levels in [0, 1] (pending-buffer fill
     high-water, EWMA-smoothed) and must be ordered
-    ``shed_dup_at <= shed_search_at <= shed_write_at`` — the ladder sheds
-    cheaper classes first.  Breaker counters use the dispatcher's clock;
+    ``shed_range_sub_at <= shed_dup_at <= shed_range_at <=
+    shed_search_at <= shed_write_at`` — the ladder sheds cheaper classes
+    first.  Subsumed ranges go cheapest of all (a queued range already
+    scans their keys, so the marginal information kept by serving them is
+    lowest per unit of span work); all ranges shed ahead of point
+    SEARCHes because each range slot costs a ``max_span`` walk where a
+    SEARCH costs one probe.  The two range rungs default to ``None`` =
+    derived — ``min(0.4, shed_dup_at)`` and ``min(0.7, shed_search_at)``
+    respectively — so a pre-range config that only tunes the point
+    thresholds keeps a valid ladder (ranges clamp to their neighbours);
+    explicit values are validated as given.  Breaker counters use the
+    dispatcher's clock;
     ``recovery_interval`` is both the rolling window for counting
     recoveries and the quiet period after which read-only mode closes.
     """
 
     # -- adaptive admission (shedding) --
     shed: bool = True
+    # None = derive from the neighbouring point thresholds (see docstring)
+    shed_range_sub_at: "float | None" = None  # ≥ this → shed subsumed RANGEs
     shed_dup_at: float = 0.5       # pressure ≥ this → shed duplicate SEARCHes
+    shed_range_at: "float | None" = None      # ≥ this → shed all RANGEs
     shed_search_at: float = 0.8    # pressure ≥ this → shed all SEARCHes
     shed_write_at: float = 0.95    # pressure ≥ this → shed writes too
     pressure_ewma: float = 0.3     # weight of the newest fill sample
@@ -110,12 +127,20 @@ class OverloadConfig:
     recovery_interval: float = 60.0
 
     def __post_init__(self):
-        if not (0.0 <= self.shed_dup_at <= self.shed_search_at
+        if self.shed_range_sub_at is None:
+            object.__setattr__(self, "shed_range_sub_at",
+                               min(0.4, self.shed_dup_at))
+        if self.shed_range_at is None:
+            object.__setattr__(self, "shed_range_at",
+                               min(0.7, self.shed_search_at))
+        if not (0.0 <= self.shed_range_sub_at <= self.shed_dup_at
+                <= self.shed_range_at <= self.shed_search_at
                 <= self.shed_write_at):
             raise ValueError(
-                f"shed thresholds must satisfy 0 <= dup <= search <= write, "
-                f"got {self.shed_dup_at}/{self.shed_search_at}"
-                f"/{self.shed_write_at}")
+                f"shed thresholds must satisfy 0 <= range_sub <= dup <= "
+                f"range <= search <= write, got {self.shed_range_sub_at}"
+                f"/{self.shed_dup_at}/{self.shed_range_at}"
+                f"/{self.shed_search_at}/{self.shed_write_at}")
         if not 0.0 < self.pressure_ewma <= 1.0:
             raise ValueError(
                 f"pressure_ewma must be in (0, 1], got {self.pressure_ewma}")
@@ -174,6 +199,7 @@ class AdmissionController:
             else a * fill + (1.0 - a) * self._ewma
 
     def plan(self, ops: np.ndarray, dup: np.ndarray, *,
+             covered: Optional[np.ndarray] = None,
              read_only: bool = False
              ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
         """Shed plan for a run of candidate arrivals.
@@ -182,28 +208,43 @@ class AdmissionController:
         ``shed_masks`` maps shed class → mask (disjoint; union is
         ``~keep``).  ``dup`` flags SEARCHes whose result is already queued
         (open-window coalescing point, or an earlier SEARCH on the same
-        key in this same run) — a *policy* signal: a dup may stop being
-        one if the window seals mid-run, which costs an unnecessary shed,
-        never a wrong result.  ``read_only`` sheds every write regardless
-        of pressure (the breaker's degraded mode).
+        key in this same run); ``covered`` flags RANGEs contained in a
+        range already queued (``Collector.range_covered``) — both are
+        *policy* signals: a dup/covered op may stop being one if the
+        window seals mid-run, which costs an unnecessary shed, never a
+        wrong result.  ``read_only`` sheds every write regardless of
+        pressure (the breaker's degraded mode); RANGEs are reads and keep
+        serving there.
         """
         ops = np.asarray(ops)
         is_search = ops == SEARCH
+        is_range = ops == RANGE
+        is_write = ~is_search & ~is_range
+        if covered is None:
+            covered = np.zeros(ops.shape, bool)
+        shed_rsub = np.zeros(ops.shape, bool)
         shed_dup = np.zeros(ops.shape, bool)
+        shed_range = np.zeros(ops.shape, bool)
         shed_search = np.zeros(ops.shape, bool)
         shed_write = np.zeros(ops.shape, bool)
         if self.cfg.shed:
             p = self.pressure
             if p >= self.cfg.shed_write_at:
-                shed_write = ~is_search
+                shed_write = is_write
             if p >= self.cfg.shed_search_at:
                 shed_search = is_search
             elif p >= self.cfg.shed_dup_at:
                 shed_dup = is_search & np.asarray(dup, bool)
+            if p >= self.cfg.shed_range_at:
+                shed_range = is_range
+            elif p >= self.cfg.shed_range_sub_at:
+                shed_rsub = is_range & np.asarray(covered, bool)
         if read_only:
-            shed_write = ~is_search
-        keep = ~(shed_dup | shed_search | shed_write)
-        masks = {SHED_SEARCH_DUP: shed_dup, SHED_SEARCH: shed_search,
+            shed_write = is_write
+        keep = ~(shed_rsub | shed_dup | shed_range | shed_search
+                 | shed_write)
+        masks = {SHED_RANGE_SUB: shed_rsub, SHED_SEARCH_DUP: shed_dup,
+                 SHED_RANGE: shed_range, SHED_SEARCH: shed_search,
                  SHED_WRITE: shed_write}
         if self.metrics is not None:
             for cls, m in masks.items():
@@ -302,6 +343,8 @@ class RunReport:
 
     results: Dict[int, Tuple[bool, int]] = dataclasses.field(
         default_factory=dict)       # qid → (found, val), acked arrivals only
+    range_results: Dict[int, Tuple[int, int]] = dataclasses.field(
+        default_factory=dict)       # qid → (count, sum), acked RANGEs only
     admitted: List[int] = dataclasses.field(default_factory=list)
     # qids admitted+executed, in admission order — the oracle subsequence
     dropped: List[int] = dataclasses.field(default_factory=list)
@@ -312,7 +355,7 @@ class RunReport:
     @property
     def goodput(self) -> int:
         """Arrivals that produced an acknowledged result."""
-        return len(self.results)
+        return len(self.results) + len(self.range_results)
 
 
 class OverloadController:
@@ -367,10 +410,12 @@ class OverloadController:
                 t_chunk = stream.t[s:e]
             self._drain_retries(dispatcher, collector, stream, heap,
                                 attempts, tick, t_now, rep)
+            k2 = getattr(stream, "keys2", None)
             self._admit(dispatcher, collector, t_chunk, stream.ops[s:e],
-                        stream.keys[s:e], stream.vals[s:e],
-                        np.arange(s, e), stream, attempts, heap, tick,
-                        t_now, rep)
+                        stream.keys[s:e],
+                        k2[s:e] if k2 is not None else None,
+                        stream.vals[s:e], np.arange(s, e), stream,
+                        attempts, heap, tick, t_now, rep)
         # drain the backoff heap past the end of the stream: time advances
         # to each due point (never backwards — the max keeps the
         # collector's nondecreasing-times contract in both time modes).
@@ -405,15 +450,20 @@ class OverloadController:
         if not qids:
             return
         q = np.asarray(qids)
+        k2 = getattr(stream, "keys2", None)
         self._admit(disp, col, np.full(q.shape, t_now), stream.ops[q],
-                    stream.keys[q], stream.vals[q], q, stream, attempts,
-                    heap, tick, t_now, rep)
+                    stream.keys[q], k2[q] if k2 is not None else None,
+                    stream.vals[q], q, stream, attempts, heap, tick,
+                    t_now, rep)
 
-    def _admit(self, disp, col, t_arr, ops, keys, vals, qids, stream,
-               attempts, heap, tick, t_now: float, rep: RunReport):
+    def _admit(self, disp, col, t_arr, ops, keys, keys2, vals, qids,
+               stream, attempts, heap, tick, t_now: float, rep: RunReport):
         """Shed-plan one run of arrivals, offer the keepers, submit seals."""
         ops = np.asarray(ops)
         keys = np.asarray(keys)
+        if keys2 is None:
+            keys2 = np.zeros(ops.shape, keys.dtype)
+        keys2 = np.asarray(keys2)
         is_search = ops == SEARCH
         dup = np.zeros(ops.shape, bool)
         if is_search.any():
@@ -425,9 +475,23 @@ class OverloadController:
             later = np.ones(sk.shape, bool)
             later[first] = False
             dup[is_search] |= later
+        is_range = ops == RANGE
+        covered = np.zeros(ops.shape, bool)
+        if is_range.any():
+            # covered = contained in a range already queued in the open
+            # window, or an exact repeat of an earlier range in this run
+            # (same policy-signal caveats as dup)
+            covered[is_range] = col.range_covered(keys[is_range],
+                                                  keys2[is_range])
+            rp = np.stack([keys[is_range], keys2[is_range]], axis=1)
+            _, first = np.unique(rp, axis=0, return_index=True)
+            later = np.ones(rp.shape[0], bool)
+            later[np.sort(first)] = False
+            covered[is_range] |= later
         read_only = getattr(disp, "breaker_state",
                             BREAKER_CLOSED) == BREAKER_READ_ONLY
-        keep, masks = self.admission.plan(ops, dup, read_only=read_only)
+        keep, masks = self.admission.plan(ops, dup, covered=covered,
+                                          read_only=read_only)
         for m in masks.values():
             for qid in np.asarray(qids)[m]:
                 self._backoff(int(qid), attempts, heap, tick, t_now, rep)
@@ -435,7 +499,8 @@ class OverloadController:
             return
         _, sealed = col.offer_many(np.asarray(t_arr)[keep], ops[keep],
                                    keys[keep], np.asarray(vals)[keep],
-                                   np.asarray(qids)[keep])
+                                   np.asarray(qids)[keep],
+                                   keys2=keys2[keep])
         for w in sealed:
             self._submit(disp, w, stream, attempts, heap, tick, t_now, rep)
 
@@ -457,6 +522,7 @@ class OverloadController:
             self.observe(res)
             rep.window_results.append(res)
             rep.results.update(res.per_arrival())
+            rep.range_results.update(res.per_arrival_ranges())
 
     def _backoff(self, qid: int, attempts, heap, tick, t_now: float,
                  rep: RunReport):

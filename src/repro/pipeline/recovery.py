@@ -79,7 +79,8 @@ class Durability:
                  fsync: str = "per_window", fsync_interval: float = 0.05,
                  snapshot_every: int = 0, keep: int = 3,
                  segment_bytes: int = 1 << 22, metrics=None,
-                 async_snapshots: bool = False):
+                 async_snapshots: bool = False,
+                 group_commit: "int | None" = None):
         self.dir = directory
         self.snapshot_every = snapshot_every
         self.metrics = metrics
@@ -114,7 +115,8 @@ class Durability:
                                       keep=keep)
         self.wal = WalWriter(os.path.join(directory, "wal"), fsync=fsync,
                              fsync_interval=fsync_interval,
-                             segment_bytes=segment_bytes)
+                             segment_bytes=segment_bytes,
+                             group_commit=group_commit)
         self._last_snap = self.ckpt.latest_step()
         if self._last_snap is None:
             # nothing acknowledged yet, so a crash inside this initial

@@ -13,7 +13,7 @@ point for us).
 Format — segments ``wal-<firstseq:016d>.seg``, each a run of records:
 
     header (36 B, little-endian):
-        magic   4s   b"PIW1"
+        magic   4s   b"PIW2" (b"PIW1" read-compatibly; see below)
         seq     u64  1-based, strictly consecutive across segments
         batch   u32  the window's static batch shape (replay re-pads to it)
         occ     u32  occupied slots logged (<= batch)
@@ -21,8 +21,16 @@ Format — segments ``wal-<firstseq:016d>.seg``, each a run of records:
         plen    u32  payload byte length (redundant; integrity cross-check)
         kdt     u8   key dtype code (0=int32, 1=int64) + 3 pad bytes
         crc     u32  crc32 over header-with-crc-zeroed + payload
-    payload: ops i32[occ] | keys kdt[occ] | vals i32[occ]
+    payload: ops i32[occ] | keys kdt[occ] | keys2 kdt[occ] | vals i32[occ]
            | qids i64[n_arr] | slots i32[n_arr]
+
+Version 2 adds the ``keys2`` lane (RANGE upper bounds, 0 at point slots)
+so recovery replays range-bearing windows through the same dispatcher
+path.  The writer always emits v2; the reader accepts v1 segments from
+pre-range logs — their payload simply lacks the keys2 block, which
+decodes as all-zeros (v1 windows cannot contain RANGE ops).  Each magic
+implies its own exact payload length, so the CRC + length cross-check
+still rejects any frame that doesn't parse as its declared version.
 
 Torn-tail vs corruption: a record that runs past EOF, or whose CRC fails
 with nothing valid after it in the *final* segment, is a torn tail — the
@@ -34,7 +42,11 @@ records.
 
 Fsync policy (``DESIGN.md §7``): ``per_window`` fsyncs every append
 (acknowledged == durable), ``interval`` fsyncs when ``fsync_interval``
-seconds have passed since the last sync (bounded loss window), ``off``
+seconds have passed since the last sync — or, with ``group_commit=N``
+set, when N appends have accumulated unsynced, whichever comes first
+(bounded loss window in both time and count, one fsync amortized over
+the group; ``group_commit=None``, the default, keeps the policy purely
+time-driven), ``off``
 never fsyncs (durable only against process death, not host death).
 ``durable_seq`` is the last sequence number the policy guarantees.
 """
@@ -55,7 +67,8 @@ from repro.faults import faultpoint
 from repro.kernels.pi_search import sentinel_for
 from repro.pipeline.collector import Window
 
-MAGIC = b"PIW1"
+MAGIC_V1 = b"PIW1"
+MAGIC = b"PIW2"
 _HEADER = struct.Struct("<4sQIIIIB3xI")
 _KDT_CODES = {"int32": 0, "int64": 1}
 _KDT_NAMES = {v: k for k, v in _KDT_CODES.items()}
@@ -83,6 +96,8 @@ class WalRecord:
     vals: np.ndarray   # (occ,) int32
     qids: np.ndarray   # (n_arr,) int64
     slots: np.ndarray  # (n_arr,) int32
+    keys2: Optional[np.ndarray] = None  # (occ,) key dtype; None == zeros
+    #   (v1 records and hand-built point-only records have no range lane)
 
     @property
     def occupancy(self) -> int:
@@ -93,8 +108,11 @@ class WalRecord:
 # record codec
 # ---------------------------------------------------------------------------
 
-def _payload_len(occ: int, n_arr: int, key_itemsize: int) -> int:
-    return occ * (8 + key_itemsize) + n_arr * 12
+def _payload_len(occ: int, n_arr: int, key_itemsize: int,
+                 version: int = 2) -> int:
+    # v2 carries two key lanes per occupied slot (keys + keys2); v1 one
+    nkeys = 2 if version >= 2 else 1
+    return occ * (8 + nkeys * key_itemsize) + n_arr * 12
 
 
 def encode_record(seq: int, window: Window) -> bytes:
@@ -104,9 +122,12 @@ def encode_record(seq: int, window: Window) -> bytes:
     code = _KDT_CODES.get(kdt.name)
     if code is None:
         raise ValueError(f"unsupported WAL key dtype {kdt}")
+    keys2 = window.keys2[:occ] if window.keys2 is not None \
+        else np.zeros(occ, kdt)
     payload = b"".join((
         np.ascontiguousarray(window.ops[:occ], np.int32).tobytes(),
         np.ascontiguousarray(window.keys[:occ]).tobytes(),
+        np.ascontiguousarray(keys2, kdt).tobytes(),
         np.ascontiguousarray(window.vals[:occ], np.int32).tobytes(),
         np.asarray(window.qids, np.int64).tobytes(),
         np.ascontiguousarray(window.slots, np.int32).tobytes(),
@@ -118,16 +139,21 @@ def encode_record(seq: int, window: Window) -> bytes:
                         len(payload), code, crc) + payload
 
 
-def _decode_payload(seq, batch, occ, n_arr, kdt, payload) -> WalRecord:
+def _decode_payload(seq, batch, occ, n_arr, kdt, payload,
+                    version: int) -> WalRecord:
     ksz = kdt.itemsize
     o = 0
     ops = np.frombuffer(payload, np.int32, occ, o); o += 4 * occ
     keys = np.frombuffer(payload, kdt, occ, o); o += ksz * occ
+    if version >= 2:
+        keys2 = np.frombuffer(payload, kdt, occ, o); o += ksz * occ
+    else:
+        keys2 = np.zeros(occ, kdt)   # pre-range log: no RANGE ops existed
     vals = np.frombuffer(payload, np.int32, occ, o); o += 4 * occ
     qids = np.frombuffer(payload, np.int64, n_arr, o); o += 8 * n_arr
     slots = np.frombuffer(payload, np.int32, n_arr, o)
     return WalRecord(seq=seq, batch=batch, ops=ops, keys=keys, vals=vals,
-                     qids=qids, slots=slots)
+                     qids=qids, slots=slots, keys2=keys2)
 
 
 def record_window(rec: WalRecord) -> Window:
@@ -141,14 +167,17 @@ def record_window(rec: WalRecord) -> Window:
     kdt = rec.keys.dtype
     ops = np.full(rec.batch, SEARCH, np.int32)
     keys = np.full(rec.batch, sentinel_for(kdt), kdt)
+    keys2 = np.zeros(rec.batch, kdt)
     vals = np.zeros(rec.batch, np.int32)
     ops[:occ] = rec.ops
     keys[:occ] = rec.keys
+    if rec.keys2 is not None:
+        keys2[:occ] = rec.keys2
     vals[:occ] = rec.vals
     return Window(ops=ops, keys=keys, vals=vals, occupancy=occ,
                   qids=rec.qids.tolist(), slots=rec.slots.copy(),
                   t_open=0.0, t_enq=np.zeros(rec.qids.shape[0]),
-                  trigger="recovered", seq=rec.seq)
+                  trigger="recovered", seq=rec.seq, keys2=keys2)
 
 
 # ---------------------------------------------------------------------------
@@ -163,10 +192,12 @@ def _try_parse(buf: bytes, off: int):
         return None
     magic, seq, batch, occ, n_arr, plen, code, crc = _HEADER.unpack_from(
         buf, off)
-    if magic != MAGIC or code not in _KDT_NAMES or occ > batch:
+    if magic not in (MAGIC, MAGIC_V1) or code not in _KDT_NAMES \
+            or occ > batch:
         return None
+    version = 2 if magic == MAGIC else 1
     kdt = np.dtype(_KDT_NAMES[code])
-    if plen != _payload_len(occ, n_arr, kdt.itemsize):
+    if plen != _payload_len(occ, n_arr, kdt.itemsize, version):
         return None
     end = off + _HEADER.size + plen
     if end > len(buf):
@@ -175,7 +206,8 @@ def _try_parse(buf: bytes, off: int):
     payload = buf[off + _HEADER.size:end]
     if zlib.crc32(payload, zlib.crc32(head0)) != crc:
         return None
-    return _decode_payload(seq, batch, occ, n_arr, kdt, payload), end
+    return _decode_payload(seq, batch, occ, n_arr, kdt, payload,
+                           version), end
 
 
 def _scan_segment(path: str, expect_seq: int, is_last: bool):
@@ -271,13 +303,22 @@ class WalWriter:
 
     def __init__(self, directory: str, *, fsync: str = "per_window",
                  fsync_interval: float = 0.05,
-                 segment_bytes: int = 1 << 22):
+                 segment_bytes: int = 1 << 22,
+                 group_commit: "int | None" = None):
         if fsync not in FSYNC_POLICIES:
             raise ValueError(f"fsync {fsync!r} not in {FSYNC_POLICIES}")
+        if group_commit is not None and group_commit < 1:
+            raise ValueError(f"group_commit must be >= 1, got {group_commit}")
         self.dir = directory
         self.fsync = fsync
         self.fsync_interval = fsync_interval
         self.segment_bytes = segment_bytes
+        # under fsync="interval": also sync once this many appends are
+        # unsynced, amortizing one fsync over a batch of windows while
+        # bounding the acknowledged-but-volatile frontier by count as
+        # well as by time; None = time-driven only (the legacy policy)
+        self.group_commit = group_commit
+        self._unsynced = 0
         self.n_appends = 0
         self.n_fsyncs = 0
         os.makedirs(directory, exist_ok=True)
@@ -333,10 +374,13 @@ class WalWriter:
         self._next_seq = seq + 1
         self._bytes += len(blob)
         self.n_appends += 1
+        self._unsynced += 1
         if self.fsync == "per_window":
             self.sync()
-        elif self.fsync == "interval" and \
-                time.monotonic() - self._t_last_fsync >= self.fsync_interval:
+        elif self.fsync == "interval" and (
+                (self.group_commit is not None and
+                 self._unsynced >= self.group_commit) or
+                time.monotonic() - self._t_last_fsync >= self.fsync_interval):
             self.sync()
         if self._bytes >= self.segment_bytes:
             self._rotate()
@@ -347,6 +391,7 @@ class WalWriter:
         os.fsync(self._f.fileno())
         self.durable_seq = self.last_seq
         self.n_fsyncs += 1
+        self._unsynced = 0
         self._t_last_fsync = time.monotonic()
 
     def _rotate(self):

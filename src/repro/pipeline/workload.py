@@ -34,6 +34,7 @@ import dataclasses
 import numpy as np
 
 from repro import data as data_mod
+from repro.core.batch import RANGE
 
 PROCESSES = ("poisson", "bursty", "diurnal", "hotkey")
 
@@ -93,6 +94,10 @@ class ArrivalConfig:
     # hotkey
     hot_keys: int = 4          # size of the adversarial hot set
     hot_frac: float = 0.8      # fraction of arrivals hitting the hot set
+    # scan mix (YCSB-E): range_frac of arrivals become RANGE(key, key+span-1)
+    range_frac: float = 0.0    # fraction of arrivals converted to scans
+    span_min: int = 1          # inclusive key-span bounds of each scan,
+    span_max: int = 64         #   drawn uniformly (YCSB-E's scan-length draw)
     seed: int = 0
 
     def __post_init__(self):
@@ -108,6 +113,15 @@ class ArrivalConfig:
         if not 0.0 <= self.hot_frac <= 1.0:
             object.__setattr__(self, "hot_frac",
                                min(1.0, max(0.0, self.hot_frac)))
+        if not 0.0 <= self.range_frac <= 1.0:
+            object.__setattr__(self, "range_frac",
+                               min(1.0, max(0.0, self.range_frac)))
+        # span bounds are geometry, not intent: a scan of zero keys (or an
+        # inverted draw interval) is a config bug — raise like hot_keys
+        if not 1 <= self.span_min <= self.span_max:
+            raise ValueError(
+                f"need 1 <= span_min <= span_max, got "
+                f"{self.span_min}/{self.span_max}")
 
 
 @dataclasses.dataclass
@@ -120,9 +134,11 @@ class ArrivalStream:
     """
 
     t: np.ndarray      # (N,) float64, nondecreasing virtual seconds
-    ops: np.ndarray    # (N,) int32 SEARCH/INSERT/DELETE
-    keys: np.ndarray   # (N,) int32
+    ops: np.ndarray    # (N,) int32 SEARCH/INSERT/DELETE/RANGE
+    keys: np.ndarray   # (N,) int32 (RANGE: inclusive lower bound)
     vals: np.ndarray   # (N,) int32
+    keys2: "np.ndarray | None" = None  # (N,) int32 RANGE upper bounds
+    #   (0 at non-RANGE positions; None == a point-only stream)
 
     def __len__(self) -> int:
         return self.t.shape[0]
@@ -130,7 +146,8 @@ class ArrivalStream:
     def __iter__(self):
         for i in range(len(self)):
             yield (float(self.t[i]), int(self.ops[i]), int(self.keys[i]),
-                   int(self.vals[i]), i)
+                   int(self.vals[i]), i,
+                   0 if self.keys2 is None else int(self.keys2[i]))
 
 
 def _rate_factor(acfg: ArrivalConfig, t: np.ndarray) -> np.ndarray:
@@ -178,6 +195,14 @@ def make_arrivals(acfg: ArrivalConfig, ycfg: data_mod.YCSBConfig,
     and op mix.  For the ``hotkey`` process, ``hot_frac`` of the arrivals
     are redirected onto a tiny fixed hot set after the mix is drawn, so the
     op mix is preserved while the key distribution becomes adversarial.
+
+    ``range_frac`` converts that fraction of arrivals into YCSB-E style
+    scans *after* the redirect: the arrival's key becomes the scan start
+    and its upper bound is ``key + span - 1`` for a span drawn uniformly
+    from ``[span_min, span_max]`` (clamped below the key sentinel).  Skew
+    and hot sets therefore shape scan *starts* exactly as they shape point
+    lookups — a hotkey flood of scans lands on the same few (lo, hi) pairs,
+    the coalescer's best case.
     """
     n = acfg.n_arrivals
     ops, qkeys, vals = data_mod.ycsb_batch(
@@ -193,6 +218,18 @@ def make_arrivals(acfg: ArrivalConfig, ycfg: data_mod.YCSBConfig,
         hot = rng.choice(np.asarray(keys), size=acfg.hot_keys, replace=False)
         mask = rng.random(n) < acfg.hot_frac
         qkeys = np.where(mask, hot[rng.integers(0, acfg.hot_keys, n)], qkeys)
-    return ArrivalStream(t=arrival_times(acfg), ops=ops.astype(np.int32),
-                         keys=qkeys.astype(np.int32),
-                         vals=vals.astype(np.int32))
+    ops = ops.astype(np.int32)
+    qkeys = qkeys.astype(np.int32)
+    keys2 = None
+    if acfg.range_frac > 0.0:
+        rng = np.random.default_rng((acfg.seed, 0x3A6E))
+        scan = rng.random(n) < acfg.range_frac
+        span = rng.integers(acfg.span_min, acfg.span_max + 1, n)
+        sent = np.iinfo(qkeys.dtype).max   # engine sentinel: never a valid hi
+        hi = np.minimum(qkeys.astype(np.int64) + span - 1,
+                        sent - 1).astype(qkeys.dtype)
+        ops = np.where(scan, np.int32(RANGE), ops)
+        keys2 = np.where(scan, hi, 0).astype(qkeys.dtype)
+    return ArrivalStream(t=arrival_times(acfg), ops=ops,
+                         keys=qkeys, vals=vals.astype(np.int32),
+                         keys2=keys2)
