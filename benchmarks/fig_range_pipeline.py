@@ -36,6 +36,7 @@ import numpy as np
 
 from benchmarks.common import default_backend, emit, make_index
 from repro import data as data_mod
+from repro.analysis.runtime import trace_guard
 from repro.core import RANGE, range_agg
 from repro.pipeline import (ArrivalConfig, Collector, Dispatcher,
                             PipelineMetrics, WindowConfig, make_arrivals,
@@ -105,8 +106,8 @@ def main(n_keys=1 << 15, batch=256, n_arrivals=4096):
         best = lambda runs: max(runs, key=lambda s: s["qps"])
         naive = best([naive_replay(idx, stream) for _ in range(2)])
         piped = best([windowed_replay(idx, stream, batch) for _ in range(2)])
-        assert range_trace_count() == base, \
-            "windowed replay re-traced the range executor"
+        trace_guard("pipeline.ranges").expect(
+            base, 0, "timed replays after warmup")
         for mode, s in (("naive", naive), ("windowed", piped)):
             rows.append(("range", name, mode, round(s["qps"]),
                          round(s["p50_ms"], 3), round(s["p99_ms"], 3),

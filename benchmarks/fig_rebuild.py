@@ -36,7 +36,7 @@ from benchmarks.common import default_backend, emit
 from repro.core import PIConfig, build, insert_batch, live_items, rebuild
 from repro.core import index as pi_index
 
-_repack = jax.jit(pi_index._rebuild_repack)
+_repack = pi_index.repack
 
 
 def _timeit(fn, arg, iters: int, warmup: int = 2) -> float:

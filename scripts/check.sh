@@ -9,6 +9,12 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "--- pilint (contract static analysis, DESIGN.md §10) ---"
+# fails fast on any finding not grandfathered by pilint-baseline.json;
+# the JSON report is uploaded as a CI artifact
+python -m repro.analysis src --baseline pilint-baseline.json \
+  --json pilint-report.json
+
 python -m pytest -x -q
 
 if [[ -z "${SKIP_SMOKE:-}" ]]; then

@@ -1,0 +1,28 @@
+"""pilint: contract-enforcing static analysis for the PI pipeline.
+
+``python -m repro.analysis src`` (alias ``scripts/pilint``) parses the
+tree with Python's ``ast`` and enforces the repo's load-bearing
+conventions as mechanical rules (DESIGN.md §10):
+
+* PI001 — one-writer ownership: index-state leaves are mutated only
+  through the sanctioned ``core`` entry points.
+* PI002 — retrace hazards inside jit scope (host round-trips,
+  tracer-dependent Python control flow).
+* PI003 — donation aliasing: ``donate_argnums`` on a buffer the caller
+  still reads (and any donation at all in the serving tier).
+* PI004 — float arithmetic on exact integer domains (keys, seqs,
+  capacities, thresholds; the PR 6 ``needs_rebuild`` bug class).
+* PI005 — inline sentinel construction instead of the named
+  ``KSENT``-family symbols / ``sentinel_for``.
+* PI006 — durable-I/O sites not covered by a registered fault point.
+
+Findings can be suppressed per line with ``# pilint: disable=PI00x`` and
+grandfathered via a committed baseline file; the CLI emits both human
+and JSON reports.  The analyzer is deliberately stdlib-only
+(``ast``/``json``/``argparse``).  ``runtime.py`` is the one module
+imported by production code (the trace-guard counters) and has no
+analyzer dependencies.
+"""
+from repro.analysis.runtime import TraceGuard, trace_guard
+
+__all__ = ["TraceGuard", "trace_guard"]

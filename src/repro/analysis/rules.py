@@ -1,0 +1,169 @@
+"""Rule base, project knowledge, registry, and the lint driver.
+
+A rule is a class with an ``id``, a ``title`` and a ``check(ctx, cfg)``
+generator yielding ``(node, message)`` pairs; ``@register`` puts it in
+the registry.  ``ProjectConfig`` concentrates the repo-specific facts
+(which attribute names are index-state leaves, which modules own them,
+which files are the durability tier, ...) so fixtures and future layouts
+can re-target the same rules without touching their logic.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import posixpath
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.walker import FileContext
+
+
+def _default_fault_points() -> Tuple[str, ...]:
+    from repro.faults import FAULT_POINTS
+    return tuple(FAULT_POINTS)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectConfig:
+    """The facts that make pilint project-aware rather than generic."""
+
+    # PI001: PIIndex / ShardedPIIndex leaves and their sanctioned owners
+    index_leaves: frozenset = frozenset({
+        "keys", "vals", "tomb", "n", "levels", "pkeys", "pvals", "ptomb",
+        "pn", "n_updates", "overflow", "shards", "fences"})
+    owner_suffixes: Tuple[str, ...] = ("core/index.py", "core/distributed.py")
+    private_entrypoints: frozenset = frozenset({
+        "_rebuild_repack", "_rebuild_incremental", "_route_pending"})
+
+    # PI003: the serving tier deliberately un-donates (breaker rollback
+    # reads the pre-window state; range serving reads it asynchronously)
+    no_donate_fragment: str = "/pipeline/"
+
+    # PI004: identifier substrings marking integer-exact domains
+    exact_tokens: Tuple[str, ...] = ("key", "seq", "capacity", "thresh",
+                                     "fence")
+
+    # PI005: where the named sentinels are *defined* (inline iinfo there
+    # is the definition, not a violation)
+    sentinel_def_suffixes: Tuple[str, ...] = ("kernels/pi_search.py",
+                                              "core/index.py")
+    sentinel_literals: frozenset = frozenset({
+        2147483647,              # pilint: disable=PI005 — the registry itself
+        9223372036854775807})    # pilint: disable=PI005 — the registry itself
+
+    # PI006: the durability tier and its registered crash points
+    fault_file_names: Tuple[str, ...] = ("wal.py", "checkpoint.py")
+    fault_points: Tuple[str, ...] = dataclasses.field(
+        default_factory=_default_fault_points)
+    io_verbs: frozenset = frozenset({"write", "flush", "fsync", "rename",
+                                     "replace", "savez"})
+
+    def owns_index(self, rel: str) -> bool:
+        return any(rel.endswith(s) for s in self.owner_suffixes)
+
+    def defines_sentinels(self, rel: str) -> bool:
+        return any(rel.endswith(s) for s in self.sentinel_def_suffixes)
+
+    def in_no_donate_zone(self, rel: str) -> bool:
+        return self.no_donate_fragment in "/" + rel
+
+    def is_fault_file(self, rel: str) -> bool:
+        return posixpath.basename(rel) in self.fault_file_names
+
+    def is_exact_name(self, identifier: str) -> bool:
+        low = identifier.lower()
+        return any(tok in low for tok in self.exact_tokens)
+
+
+class Rule:
+    """One contract; subclasses yield ``(node, message)`` violations."""
+
+    id: str = ""
+    title: str = ""
+
+    def check(self, ctx: FileContext, cfg: ProjectConfig):
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls):
+    _REGISTRY[cls.id] = cls()
+    return cls
+
+
+def _load_rule_modules() -> None:
+    # import-for-effect: each module registers its rules on import
+    from repro.analysis import rules_exactness    # noqa: F401
+    from repro.analysis import rules_faults       # noqa: F401
+    from repro.analysis import rules_ownership    # noqa: F401
+    from repro.analysis import rules_tracing      # noqa: F401
+
+
+def all_rules() -> List[Rule]:
+    _load_rule_modules()
+    return [_REGISTRY[rule_id] for rule_id in sorted(_REGISTRY)]
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def lint_file(path: str, rel: Optional[str] = None,
+              cfg: Optional[ProjectConfig] = None) -> List[Finding]:
+    """Lint one file; findings are suppression-filtered and deduplicated
+    per (rule, line) so nested matches report once."""
+    cfg = cfg or ProjectConfig()
+    rel = (rel or path).replace(os.sep, "/")
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    try:
+        ctx = FileContext(path, rel, source)
+    except SyntaxError as e:
+        return [Finding(rel, e.lineno or 1, 0, "PI000",
+                        f"file does not parse: {e.msg}")]
+    out: List[Finding] = []
+    seen = set()
+    for rule in all_rules():
+        for node, message in rule.check(ctx, cfg):
+            line = getattr(node, "lineno", None) or 1
+            col = getattr(node, "col_offset", 0)
+            if ctx.suppressed(line, rule.id):
+                continue
+            if (rule.id, line) in seen:
+                continue
+            seen.add((rule.id, line))
+            context = (ctx.lines[line - 1].strip()
+                       if 0 < line <= len(ctx.lines) else "")
+            out.append(Finding(rel, line, col, rule.id, message, context))
+    return sorted(out)
+
+
+def iter_python_files(paths: Iterable[str]) -> List[str]:
+    files: List[str] = []
+    for path in paths:
+        if os.path.isfile(path):
+            files.append(path)
+        else:
+            for dirpath, dirnames, filenames in os.walk(path):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d != "__pycache__")
+                files.extend(os.path.join(dirpath, f)
+                             for f in sorted(filenames)
+                             if f.endswith(".py"))
+    return files
+
+
+def lint_paths(paths: Iterable[str],
+               cfg: Optional[ProjectConfig] = None) -> List[Finding]:
+    """Lint every ``.py`` under ``paths`` (files or directories)."""
+    cfg = cfg or ProjectConfig()
+    findings: List[Finding] = []
+    for path in iter_python_files(paths):
+        rel = os.path.relpath(path)
+        if rel.startswith(".."):
+            rel = path
+        findings.extend(lint_file(path, rel, cfg))
+    return sorted(findings)

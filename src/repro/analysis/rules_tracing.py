@@ -1,0 +1,156 @@
+"""PI002 retrace hazards and PI003 donation aliasing.
+
+PI002 guards the one-compile-per-run contract (``trace_guard`` is its
+runtime half): inside a jit scope it flags host round-trips
+(``.item()``, ``np.asarray``/``np.array``, ``float()``/``int()``/
+``bool()`` on traced values) and Python ``if``/``while`` whose test
+depends on a traced parameter.  A parameter reference is treated as
+static — hence fine — when every use in the expression goes through
+``.shape`` / ``.ndim`` / ``.dtype`` / ``.size`` / ``.config``, or when
+the parameter is named in ``static_argnums``/``static_argnames``.  The
+check is first-order (locals derived from tracers are not chased);
+that is exactly the precision the tree needs, and the runtime guard
+backstops the rest.
+
+PI003 guards the dispatcher's deliberate un-donation: any
+``donate_argnums`` inside the serving tier is a regression (breaker
+rollback and async range serving read the pre-window state), and
+elsewhere a donated buffer must not be read again after the call unless
+the call site rebinds it (the functional ``index, out = execute(index,
+...)`` handoff).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import Rule, register
+from repro.analysis.walker import callee_name
+
+_STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "config"})
+_NP_MATERIALIZERS = frozenset({"np.asarray", "np.array", "numpy.asarray",
+                               "numpy.array"})
+_HOST_CASTS = frozenset({"float", "int", "bool"})
+
+
+def _references_tracer(expr: ast.expr, data_params, ctx) -> bool:
+    """True when ``expr`` reads a traced parameter *as a value* (not just
+    its static metadata)."""
+    for node in ast.walk(expr):
+        if not (isinstance(node, ast.Name) and node.id in data_params
+                and isinstance(node.ctx, ast.Load)):
+            continue
+        cur = node
+        static = False
+        while True:
+            parent = ctx.parents.get(cur)
+            if (isinstance(parent, ast.Attribute) and parent.value is cur):
+                if parent.attr in _STATIC_ATTRS:
+                    static = True
+                    break
+                cur = parent
+            elif isinstance(parent, ast.Subscript) and parent.value is cur:
+                cur = parent
+            else:
+                break
+        if not static:
+            return True
+    return False
+
+
+@register
+class RetraceRule(Rule):
+    id = "PI002"
+    title = "retrace hazard inside jit scope"
+
+    def check(self, ctx, cfg):
+        for fn, statics in ctx.jit_functions.items():
+            data_params = {a.arg for a in (*fn.args.posonlyargs,
+                                           *fn.args.args)
+                           if a.arg not in statics and a.arg != "self"}
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    func = node.func
+                    name = callee_name(func)
+                    if isinstance(func, ast.Attribute) and \
+                            func.attr == "item":
+                        yield node, (
+                            ".item() inside jit scope — host round-trip; "
+                            "keep the value on device or hoist it out of "
+                            "the traced function")
+                    elif name in _NP_MATERIALIZERS:
+                        yield node, (
+                            f"{name}() inside jit scope materializes a "
+                            f"traced value on host (constant-folds the "
+                            f"trace or fails); use jnp instead")
+                    elif (name in _HOST_CASTS and node.args
+                          and _references_tracer(node.args[0], data_params,
+                                                 ctx)):
+                        yield node, (
+                            f"{name}() on a traced value inside jit scope "
+                            f"— per-call host scalar breaks the one-trace "
+                            f"contract; keep it an array or pass it "
+                            f"static")
+                elif isinstance(node, (ast.If, ast.While)):
+                    if _references_tracer(node.test, data_params, ctx):
+                        yield node, (
+                            "Python control flow on a traced value — "
+                            "retraces per branch taken; use lax.cond / "
+                            "lax.while_loop / jnp.where")
+
+
+def _target_names(target: ast.expr):
+    return {n.id for n in ast.walk(target) if isinstance(n, ast.Name)}
+
+
+@register
+class DonationRule(Rule):
+    id = "PI003"
+    title = "donation aliasing"
+
+    def check(self, ctx, cfg):
+        in_pipeline = cfg.in_no_donate_zone(ctx.rel)
+        donating = {}
+        for site in ctx.jit_sites:
+            if not site.donate:
+                continue
+            if in_pipeline:
+                yield site.call, (
+                    "donate_argnums in the serving tier — the dispatcher "
+                    "deliberately un-donates (breaker rollback and range "
+                    "serving read the pre-window state)")
+            elif site.assigned_name:
+                donating[site.assigned_name] = site.donate
+        if not donating:
+            return
+        functions = [n for n in ast.walk(ctx.tree)
+                     if isinstance(n, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef))]
+        for fn in functions:
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Name)
+                        and node.func.id in donating):
+                    continue
+                rebound = set()
+                parent = ctx.parents.get(node)
+                if isinstance(parent, ast.Assign):
+                    for t in parent.targets:
+                        rebound |= _target_names(t)
+                for pos in donating[node.func.id]:
+                    if not (pos < len(node.args)
+                            and isinstance(node.args[pos], ast.Name)):
+                        continue
+                    buf = node.args[pos].id
+                    if buf in rebound:
+                        continue        # functional handoff: x = f(x, ...)
+                    reused = any(
+                        isinstance(n, ast.Name) and n.id == buf
+                        and isinstance(n.ctx, ast.Load)
+                        and getattr(n, "lineno", 0) > node.lineno
+                        for n in ast.walk(fn))
+                    if reused:
+                        yield node, (
+                            f"`{buf}` is donated to `{node.func.id}` but "
+                            f"read again afterwards — donated buffers are "
+                            f"invalidated at the call; rebind the result "
+                            f"or drop the donation")

@@ -1,0 +1,73 @@
+"""Runtime side of the one-trace contract (the dynamic half of PI002).
+
+The serving tier promises exactly one compiled program per run: every
+tick is padded to one static window shape, so ``jax.jit`` traces each
+executor once and replays the compiled program thereafter.  The static
+analyzer (rule PI002 in ``repro.analysis``) rejects code that would
+break this at trace time; this module is the matching runtime check —
+a named counter bumped by a Python side effect inside the jitted body
+(side effects run only while tracing, so the count is compilations, not
+calls) plus one canonical assertion message, so every suite and
+benchmark reports a retrace the same way.
+
+Producer (inside the traced function)::
+
+    _TRACES = trace_guard("core.execute")
+
+    def execute_impl(...):
+        _TRACES.bump()          # trace-time side effect
+        ...
+
+Consumer (around a serving run)::
+
+    guard = trace_guard("core.execute")
+    base = guard.count()
+    ... drive the pipeline ...
+    guard.expect(base, 1, "padded serving run")
+
+Stdlib-only by design: production modules import this, and the analyzer
+package must stay runnable anywhere the interpreter is.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+
+class TraceGuard:
+    """Named trace counter with one canonical assertion format."""
+
+    __slots__ = ("name", "_traces")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._traces = 0
+
+    def bump(self) -> None:
+        """Count one trace; call from inside the jitted body."""
+        self._traces += 1
+
+    def count(self) -> int:
+        return self._traces
+
+    def message(self, got: int, want: int, what: str = "") -> str:
+        """The single retrace-failure format every assert site uses."""
+        ctx = f" during {what}" if what else ""
+        return (f"trace_guard[{self.name}]: {got} trace(s){ctx} where "
+                f"{want} expected — a shape, dtype or static arg varied "
+                f"between calls and retriggered compilation (PI002)")
+
+    def expect(self, base: int, want: int = 1, what: str = "") -> None:
+        """Assert exactly ``want`` traces happened since ``base``."""
+        got = self._traces - base
+        assert got == want, self.message(got, want, what)
+
+
+_GUARDS: Dict[str, TraceGuard] = {}
+
+
+def trace_guard(name: str) -> TraceGuard:
+    """Process-wide guard registry: one counter per name."""
+    guard = _GUARDS.get(name)
+    if guard is None:
+        guard = _GUARDS[name] = TraceGuard(name)
+    return guard

@@ -1,0 +1,185 @@
+"""Per-file AST context: parents, suppressions, jit-scope discovery.
+
+The walker is project-aware in exactly the ways the rules need:
+
+* **Suppressions** — a ``# pilint: disable=PI001,PI004`` comment on the
+  physical line a finding is reported on silences those rules there
+  (``disable=all`` silences everything on the line).
+* **Jit scopes** — functions compiled by ``jax.jit``, whether decorated
+  (``@jax.jit``, ``@partial(jax.jit, static_argnums=...)``) or wrapped
+  at module scope (``execute = jax.jit(execute_impl, donate_argnums=0)``).
+  Each scope carries its *static* parameter names (from
+  ``static_argnums``/``static_argnames``), so rules can tell trace-time
+  constants from traced values.
+* **Jit sites** — every ``jax.jit(...)`` call itself, with its donated
+  positions and (when resolvable) the wrapped function and the name the
+  wrapper was bound to, for the donation-aliasing rule.
+
+Only syntax is consulted: the walker never imports the file it lints.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+_SUPPRESS_RE = re.compile(r"#\s*pilint:\s*disable=([A-Za-z0-9_*,\s]+)")
+
+
+def callee_name(node: ast.expr) -> str:
+    """Dotted name of a call target ('np.ceil', 'faultpoint', '')."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_expr(node: ast.expr) -> bool:
+    """``jax.jit`` / ``jit`` / ``(functools.)partial(jax.jit, ...)``."""
+    name = callee_name(node)
+    if name in ("jit", "jax.jit"):
+        return True
+    if isinstance(node, ast.Call) and callee_name(node.func) in (
+            "partial", "functools.partial"):
+        return bool(node.args) and _is_jit_expr(node.args[0])
+    return False
+
+
+def _literal(node: Optional[ast.expr]):
+    if node is None:
+        return None
+    try:
+        return ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return None
+
+
+def _as_tuple(value) -> Tuple:
+    if value is None:
+        return ()
+    if isinstance(value, (list, tuple, set, frozenset)):
+        return tuple(value)
+    return (value,)
+
+
+def _jit_keywords(node: ast.expr) -> Dict[str, Tuple]:
+    """static/donate argnums+argnames from a jit expression's keywords."""
+    out = {"static_argnums": (), "static_argnames": (),
+           "donate_argnums": (), "donate_argnames": ()}
+    calls: List[ast.Call] = []
+    if isinstance(node, ast.Call):
+        calls.append(node)                      # partial(jax.jit, kw=...)
+    for call in calls:
+        for kw in call.keywords:
+            if kw.arg in out:
+                out[kw.arg] = _as_tuple(_literal(kw.value))
+    return out
+
+
+def _param_names(fn: ast.FunctionDef) -> List[str]:
+    return [a.arg for a in (*fn.args.posonlyargs, *fn.args.args)]
+
+
+def _static_params(fn: ast.FunctionDef, kws: Dict[str, Tuple]) -> Set[str]:
+    params = _param_names(fn)
+    statics: Set[str] = set(str(n) for n in kws["static_argnames"])
+    for pos in kws["static_argnums"]:
+        if isinstance(pos, int) and 0 <= pos < len(params):
+            statics.add(params[pos])
+    return statics
+
+
+@dataclasses.dataclass
+class JitSite:
+    """One ``jax.jit(...)`` application found in the file."""
+
+    call: ast.expr                      # the jit expression node
+    func: Optional[ast.FunctionDef]     # wrapped function, when resolvable
+    assigned_name: Optional[str]        # ``name = jax.jit(f, ...)``
+    donate: Tuple[int, ...]             # donated positional indices
+    statics: Set[str]                   # static parameter names
+
+
+class FileContext:
+    """Everything the rules need to know about one parsed file."""
+
+    def __init__(self, path: str, rel: str, source: str):
+        self.path = path
+        self.rel = rel.replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        self.suppressions = self._scan_suppressions()
+        self.jit_sites: List[JitSite] = []
+        self.jit_functions: Dict[ast.FunctionDef, Set[str]] = {}
+        self._discover_jit()
+
+    # -- suppressions ------------------------------------------------------
+
+    def _scan_suppressions(self) -> Dict[int, Set[str]]:
+        out: Dict[int, Set[str]] = {}
+        for lineno, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if m:
+                out[lineno] = {r.strip() for r in m.group(1).split(",")
+                               if r.strip()}
+        return out
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        rules = self.suppressions.get(line, ())
+        return "all" in rules or "*" in rules or rule in rules
+
+    # -- jit discovery -----------------------------------------------------
+
+    def _discover_jit(self) -> None:
+        defs_by_name: Dict[str, ast.FunctionDef] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs_by_name.setdefault(node.name, node)
+
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for deco in node.decorator_list:
+                    if _is_jit_expr(deco):
+                        self._add_site(deco, node, None)
+            elif isinstance(node, ast.Assign):
+                value = node.value
+                if (isinstance(value, ast.Call) and _is_jit_expr(value.func)
+                        and value.args):
+                    target = None
+                    if (len(node.targets) == 1
+                            and isinstance(node.targets[0], ast.Name)):
+                        target = node.targets[0].id
+                    fn = None
+                    if isinstance(value.args[0], ast.Name):
+                        fn = defs_by_name.get(value.args[0].id)
+                    self._add_site(value, fn, target)
+
+    def _add_site(self, expr: ast.expr, fn, assigned_name) -> None:
+        kws = _jit_keywords(expr)
+        donate = tuple(p for p in kws["donate_argnums"]
+                       if isinstance(p, int))
+        statics = _static_params(fn, kws) if fn is not None else set()
+        if kws["donate_argnames"]:
+            # positional resolution of donated names, when the wrapped
+            # function is known
+            if fn is not None:
+                params = _param_names(fn)
+                donate = donate + tuple(
+                    params.index(n) for n in kws["donate_argnames"]
+                    if n in params)
+        self.jit_sites.append(JitSite(call=expr, func=fn,
+                                      assigned_name=assigned_name,
+                                      donate=donate, statics=statics))
+        if fn is not None:
+            merged = self.jit_functions.setdefault(fn, set())
+            merged |= statics

@@ -34,6 +34,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import index as pi
 from repro.core.batch import SEARCH
+from repro.core.engine import sentinel_for
 from repro.sharding import shard_map
 
 NOOP_KEY = None  # padding queries use the key-dtype sentinel (max value)
@@ -119,7 +120,7 @@ def build_sharded(cfg: pi.PIConfig, n_shards: int, keys, vals,
         cuts = [keys[(len(keys) * s) // n_shards] for s in range(1, n_shards)] \
             if len(keys) else [0] * (n_shards - 1)
         lo = np.iinfo(kdt).min if np.issubdtype(kdt, np.integer) else -np.inf
-        hi = np.iinfo(kdt).max if np.issubdtype(kdt, np.integer) else np.inf
+        hi = sentinel_for(kdt)    # top fence == the engine pad key
         fences = np.array([lo, *cuts, hi], dtype=kdt)
     fences = np.asarray(fences, dtype=kdt)
     shard_trees = []
@@ -146,7 +147,7 @@ def _local_execute(shard: pi.PIIndex, fences, ops, qkeys, qvals,
     """
     S = n_shards
     kdt = jnp.dtype(shard.keys.dtype)
-    sent = pi._sentinel(kdt)
+    sent = sentinel_for(kdt)
     local = jax.tree.map(lambda x: x[0], shard)
     b = ops.shape[0]
 
@@ -215,7 +216,11 @@ def make_sharded_executor(mesh: Mesh, cfg: pi.PIConfig, batch_per_shard: int,
     if cached is not None:
         return cached
     S = mesh.shape[axis_name]
-    cap = int(np.ceil(batch_per_shard / S * capacity_factor))
+    # integer-exact ceil (PI004): the factor is frozen to a /1024 rational
+    # so the lane budget cannot wobble with float rounding — the same
+    # split needs_rebuild uses for its churn threshold
+    num = int(round(capacity_factor * 1024))
+    cap = -(-batch_per_shard * num // (S * 1024))
     spec_state = jax.tree.map(lambda _: P(axis_name), pi.empty(cfg))
     # fences replicated; batch sharded on arrival
     body = partial(_local_execute, axis_name=axis_name, cap=cap, n_shards=S)

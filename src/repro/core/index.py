@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.runtime import trace_guard
 from repro.core.batch import SEARCH, INSERT, DELETE, seg_last_write_scan, sort_queries
 from repro.core.engine import BACKENDS, get_engine, sentinel_for
 
@@ -334,15 +335,17 @@ def lookup(index: PIIndex, q: jnp.ndarray):
 # batch execution (Alg. 1 = partition→traverse→redistribute→execute)
 # ---------------------------------------------------------------------------
 
-# Incremented on every *trace* of execute_impl (Python side effects run at
+# Bumped on every *trace* of execute_impl (Python side effects run at
 # trace time only): under jit this counts compilations, not calls.  The
 # serving pipeline pads every tick to one static width precisely so this
-# stays at 1 — tests assert it (deltas via execute_trace_count()).
-EXECUTE_TRACES = 0
+# stays at 1 — suites and benchmarks assert it through the guard's
+# canonical message (analysis/runtime.py; deltas via
+# execute_trace_count()).
+_TRACES = trace_guard("core.execute")
 
 
 def execute_trace_count() -> int:
-    return EXECUTE_TRACES
+    return _TRACES.count()
 
 
 def execute_impl(index: PIIndex, ops: jnp.ndarray, qkeys: jnp.ndarray,
@@ -357,8 +360,7 @@ def execute_impl(index: PIIndex, ops: jnp.ndarray, qkeys: jnp.ndarray,
     one scatter lane (the segment tail), which *is* the paper's
     "each modified node is owned by exactly one thread" invariant.
     """
-    global EXECUTE_TRACES
-    EXECUTE_TRACES += 1
+    _TRACES.bump()
     cfg = index.config
     B = ops.shape[0]
     kdt = index.keys.dtype
@@ -680,6 +682,12 @@ def rebuild(index: PIIndex) -> PIIndex:
 def maybe_rebuild(index: PIIndex) -> PIIndex:
     """Branchless 'daemon': rebuild iff the update threshold tripped."""
     return jax.lax.cond(needs_rebuild(index), rebuild, lambda i: i, index)
+
+
+# Sanctioned forced-repack entry (PI001): the breaker's reclaim path and
+# the offline rebuild benchmarks share this one compiled program instead
+# of each jitting the private internal.
+repack = jax.jit(_rebuild_repack)
 
 
 # ---------------------------------------------------------------------------

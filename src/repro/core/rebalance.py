@@ -36,9 +36,9 @@ def rebalance_from_load(fences: np.ndarray, load: np.ndarray,
     orig = np.asarray(fences)
     fences = orig.astype(np.float64).copy()
     if key_lo is not None:
-        fences[0] = float(key_lo)
+        fences[0] = float(key_lo)    # pilint: disable=PI004 — CDF estimate
     if key_hi is not None:
-        fences[-1] = float(key_hi)
+        fences[-1] = float(key_hi)   # pilint: disable=PI004 — CDF estimate
     load = np.maximum(np.asarray(load, dtype=np.float64), 1e-9)
     S = len(load)
     cdf = np.concatenate([[0.0], np.cumsum(load)])

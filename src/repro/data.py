@@ -102,7 +102,7 @@ def range_batch(cfg: YCSBConfig, keys: np.ndarray, step: int,
                 granularity: int):
     """Range-query batch: [lo, hi] spans covering ~granularity keys."""
     rng = np.random.default_rng((cfg.seed, step, granularity))
-    span = int(cfg.key_space / len(keys) * granularity)
+    span = cfg.key_space * granularity // len(keys)
     lo = rng.integers(0, cfg.key_space - span, cfg.batch).astype(np.int32)
     hi = (lo + span).astype(np.int32)
     return lo, hi

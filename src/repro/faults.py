@@ -21,6 +21,8 @@ from typing import Callable, Optional
 FAULT_POINTS = (
     "wal.mid_append",     # torn WAL record: header+partial payload on disk
     "wal.after_append",   # full record written, fsync not yet issued
+    "wal.pre_sync",       # record(s) written in full, death inside the
+                          # fsync that would have acknowledged them
     "ckpt.mid_write",     # snapshot tmp dir partially written, no manifest
     "ckpt.pre_rename",    # complete tmp dir, atomic publish rename pending
 )

@@ -133,7 +133,7 @@ def _step_recover(index, ops, keys, vals):
 # the breaker's forced reclaim: merge the pending buffer into storage and
 # re-spread the slack, leaving the full pending capacity available for the
 # quarantined windows' replay
-_repack = jax.jit(pi._rebuild_repack)
+_repack = pi.repack
 
 
 @dataclasses.dataclass

@@ -36,19 +36,21 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.runtime import trace_guard
 from repro.core.batch import RANGE
 from repro.core.engine import get_engine, sentinel_for
 
-# Incremented on every *trace* of the range executors (Python side effects
-# run at trace time only): under jit this counts compilations, not calls.
+# Bumped on every *trace* of the range executors (Python side effects run
+# at trace time only): under jit this counts compilations, not calls.
 # The dispatcher feeds the executors the full static window batch with
-# non-range lanes neutralized, so this stays at 1 per serving run — tests
-# assert it (deltas via range_trace_count()).
-RANGE_TRACES = 0
+# non-range lanes neutralized, so this stays at 1 per serving run —
+# suites and benchmarks assert it through the guard's canonical message
+# (analysis/runtime.py; deltas via range_trace_count()).
+_TRACES = trace_guard("pipeline.ranges")
 
 
 def range_trace_count() -> int:
-    return RANGE_TRACES
+    return _TRACES.count()
 
 
 def _range_lanes(ops, keys, keys2, kdt):
@@ -74,8 +76,7 @@ def execute_ranges(index, ops: jnp.ndarray, keys: jnp.ndarray,
     execute).  Returns two (batch,) int32 arrays; non-range slots read
     (0, 0).  Read-only: the index is not modified (and not donated).
     """
-    global RANGE_TRACES
-    RANGE_TRACES += 1
+    _TRACES.bump()
     lo, hi = _range_lanes(ops, keys, keys2, index.keys.dtype)
     return get_engine(index.config).range_agg(index, lo, hi, max_span)
 
@@ -101,8 +102,7 @@ def execute_ranges_sharded(state, ops: jnp.ndarray, keys: jnp.ndarray,
 @partial(jax.jit, static_argnums=(5, 6))
 def _execute_ranges_sharded(shards, fences, ops, keys, keys2,
                             max_span: int, n_shards: int):
-    global RANGE_TRACES
-    RANGE_TRACES += 1
+    _TRACES.bump()
     kdt = shards.keys.dtype
     lo, hi = _range_lanes(ops, keys, keys2, kdt)
     cnt = jnp.zeros(ops.shape, jnp.int32)

@@ -388,6 +388,7 @@ class WalWriter:
 
     def sync(self):
         """fsync the current segment; advances the acknowledged frontier."""
+        faultpoint("wal.pre_sync")    # written in full, ack not yet durable
         os.fsync(self._f.fileno())
         self.durable_seq = self.last_seq
         self.n_fsyncs += 1

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro import data as data_mod
 from repro.core.batch import RANGE
+from repro.core.engine import sentinel_for
 
 PROCESSES = ("poisson", "bursty", "diurnal", "hotkey")
 
@@ -225,7 +226,7 @@ def make_arrivals(acfg: ArrivalConfig, ycfg: data_mod.YCSBConfig,
         rng = np.random.default_rng((acfg.seed, 0x3A6E))
         scan = rng.random(n) < acfg.range_frac
         span = rng.integers(acfg.span_min, acfg.span_max + 1, n)
-        sent = np.iinfo(qkeys.dtype).max   # engine sentinel: never a valid hi
+        sent = int(sentinel_for(qkeys.dtype))   # pad key: never a valid hi
         hi = np.minimum(qkeys.astype(np.int64) + span - 1,
                         sent - 1).astype(qkeys.dtype)
         ops = np.where(scan, np.int32(RANGE), ops)

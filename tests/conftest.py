@@ -12,6 +12,15 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+def pytest_configure(config):
+    # A deprecation surfacing from our own package is a contract violation,
+    # not noise: fail the suite the moment a warning is attributed to a
+    # repro.* module.  Third-party deprecations stay warnings — the scoped
+    # module pattern keeps jax/numpy churn from breaking the tier-1 gate.
+    config.addinivalue_line(
+        "filterwarnings", "error::DeprecationWarning:repro")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

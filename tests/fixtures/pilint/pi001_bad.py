@@ -1,0 +1,18 @@
+"""Index-state writes outside the ownership API — PI001 positives."""
+from repro.core.index import _rebuild_repack        # expect: PI001
+
+
+def overwrite(idx, new_val):
+    idx.n = idx.n + 1                               # expect: PI001
+    idx.pkeys[0] = new_val                          # expect: PI001
+    idx.n_updates += 1                              # expect: PI001
+    return idx
+
+
+def scatter(idx, new_val):
+    fresh = idx.keys.at[0].set(new_val)             # expect: PI001
+    return fresh
+
+
+def sneak(pi, idx):
+    return pi._rebuild_repack(idx)                  # expect: PI001

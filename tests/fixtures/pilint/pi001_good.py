@@ -1,0 +1,18 @@
+"""Mutation routed through the sanctioned entry points — PI001 negatives."""
+from repro.core import insert_batch, repack
+
+
+def grow(idx, batch_ops, batch_payload):
+    idx, _ = insert_batch(idx, batch_ops, batch_payload)
+    return repack(idx)
+
+
+def observe(idx):
+    # reads of index leaves are always fine; only stores are owned
+    return int(idx.n), int(idx.pn)
+
+
+def local_state(new_val):
+    slots = [0, 0]
+    slots[0] = new_val      # plain local container, not an index leaf
+    return slots

@@ -1,0 +1,28 @@
+"""Host round-trips and tracer control flow inside jit — PI002 positives."""
+from functools import partial
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def hot(x):
+    if x > 0:                                       # expect: PI002
+        x = x + 1
+    total = x.sum().item()                          # expect: PI002
+    host = np.asarray(x)                            # expect: PI002
+    return x, total, host
+
+
+@partial(jax.jit, static_argnums=(1,))
+def cast(x, n):
+    return int(x) * n                               # expect: PI002
+
+
+def loop_impl(x):
+    while x < 10:                                   # expect: PI002
+        x = x * 2
+    return x
+
+
+loop = jax.jit(loop_impl)

@@ -1,0 +1,24 @@
+"""Static metadata, static args, and host-side code — PI002 negatives."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def shaped(x):
+    if x.shape[0] > 4:          # shape is static metadata, known at trace
+        return jnp.cumsum(x)
+    return x
+
+
+@partial(jax.jit, static_argnums=(1,))
+def repeat(x, n):
+    if n > 2:                   # n is a static arg: a trace-time constant
+        return x * int(n)
+    return x
+
+
+def host_side(x):
+    # not a jit scope — host materialization here is the point
+    return float(x.sum())

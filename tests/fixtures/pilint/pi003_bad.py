@@ -1,0 +1,14 @@
+"""Donated buffer read again after the call — PI003 positive."""
+import jax
+
+
+def step_impl(state, ops):
+    return state + ops
+
+
+step = jax.jit(step_impl, donate_argnums=(0,))
+
+
+def drive(state, ops):
+    out = step(state, ops)                          # expect: PI003
+    return out + state

@@ -1,0 +1,18 @@
+"""Functional handoff and last-use donation — PI003 negatives."""
+import jax
+
+
+def step_impl(state, ops):
+    return state + ops
+
+
+step = jax.jit(step_impl, donate_argnums=(0,))
+
+
+def drive(state, ops):
+    state = step(state, ops)    # rebound at the call: x = f(x, ...) handoff
+    return state
+
+
+def last_use(state, ops):
+    return step(state, ops)     # the donated buffer is never read again

@@ -1,0 +1,13 @@
+"""Float math truncated back onto exact integer domains — PI004 positives."""
+import math
+
+
+def plan(capacity, batch, next_seq):
+    hi = int(capacity / 2)                          # expect: PI004
+    lo = round(batch / 3 * capacity)                # expect: PI004
+    pad = math.ceil(next_seq / 8)                   # expect: PI004
+    return hi, lo, pad
+
+
+def widen(next_seq):
+    return float(next_seq)                          # expect: PI004

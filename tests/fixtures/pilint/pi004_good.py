@@ -1,0 +1,17 @@
+"""Exact-domain arithmetic kept integer, plus a justified suppression."""
+
+
+def plan(capacity, batch):
+    hi = capacity // 2                       # floor-div stays exact
+    num = int(round(0.75 * 1024))            # frozen /1024 rational: no Div
+    cap = -(-batch * num // 1024)            # integer ceil, no float detour
+    return hi, num, cap
+
+
+def unrelated(ratio):
+    return int(ratio / 2)                    # no exact-domain name involved
+
+
+def estimate(capacity):
+    # deliberately estimative math gets an inline, justified suppression
+    return int(capacity / 2)                 # pilint: disable=PI004 — estimate

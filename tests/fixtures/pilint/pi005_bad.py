@@ -1,0 +1,10 @@
+"""Inline sentinel construction — PI005 positives."""
+import numpy as np
+
+
+def pad_value(dtype):
+    return np.iinfo(dtype).max                      # expect: PI005
+
+
+EMPTY_I32 = 2147483647                              # expect: PI005
+EMPTY_I64 = 9223372036854775807                     # expect: PI005

@@ -1,0 +1,15 @@
+"""Named sentinels and domain bounds — PI005 negatives."""
+import numpy as np
+
+from repro.kernels.pi_search import sentinel_for
+
+
+def pad_value(dtype):
+    return sentinel_for(dtype)
+
+
+def domain_floor(dtype):
+    return np.iinfo(dtype).min      # a domain bound, not the sentinel
+
+
+NOT_A_SENTINEL = 2147483646

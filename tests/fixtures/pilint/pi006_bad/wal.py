@@ -1,0 +1,15 @@
+"""Durable I/O outside fault-point coverage — PI006 positives."""
+import os
+
+from repro.faults import faultpoint
+
+
+def append(fh, payload):
+    fh.write(payload)                               # expect: PI006
+    fh.flush()                                      # expect: PI006
+    os.fsync(fh.fileno())                           # expect: PI006
+
+
+def publish(tmp, final):
+    faultpoint("wal.not_registered")                # expect: PI006
+    os.replace(tmp, final)                          # expect: PI006

@@ -1,0 +1,20 @@
+"""Every durable effect under a registered crash point — PI006 negatives."""
+import os
+
+from repro.faults import faultpoint
+
+
+def append(fh, payload):
+    faultpoint("wal.mid_append")
+    fh.write(payload)
+    fh.flush()
+
+
+def sync(fh):
+    faultpoint("wal.pre_sync")
+    os.fsync(fh.fileno())
+
+
+def parse(line):
+    # no durable I/O at all: nothing to cover
+    return line.split(",")

@@ -1,0 +1,13 @@
+"""Any donation inside the serving tier is a regression — PI003 positive.
+
+The dispatcher deliberately un-donates: breaker rollback and async range
+serving read the pre-window index state.
+"""
+import jax
+
+
+def execute_impl(state, ops):
+    return state + ops
+
+
+execute = jax.jit(execute_impl, donate_argnums=(0,))    # expect: PI003

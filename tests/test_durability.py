@@ -169,8 +169,9 @@ def check_recovery_contract(d, kind, sealed, acked, crash_point):
     if crash_point == "wal.mid_append":
         # (c) the torn record is excluded: recovery == acked, exactly
         assert n_applied == acked_max
-    elif crash_point == "wal.after_append":
-        # fully written but unsynced: standard WAL semantics allow the
+    elif crash_point in ("wal.after_append", "wal.pre_sync"):
+        # fully written but unsynced (pre_sync dies inside the fsync
+        # itself — same on-disk class): standard WAL semantics allow the
         # one unacked suffix record to survive (it did — Python-level
         # death can't unwrite unbuffered bytes), never more
         assert n_applied <= acked_max + 1

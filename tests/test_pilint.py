@@ -1,0 +1,216 @@
+"""pilint — the contract-enforcing static-analysis pass (DESIGN.md §10).
+
+The fixture corpus under ``tests/fixtures/pilint/`` carries its own
+oracle: every violating line ends in ``# expect: PI00X``, and the test
+asserts the *exact* set of ``(rule, line)`` findings per file — good
+fixtures have empty marker sets, so false positives fail just as loudly
+as false negatives.  Fixtures are parsed by the analyzer, never
+imported.
+"""
+import json
+import os
+import re
+
+import pytest
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.cli import main as pilint_main
+from repro.analysis.rules import all_rules, lint_file
+from repro.analysis.runtime import TraceGuard, trace_guard
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXDIR = os.path.join(ROOT, "tests", "fixtures", "pilint")
+
+_EXPECT_RE = re.compile(r"#\s*expect:\s*(PI\d{3})")
+
+
+def _fixture_files():
+    out = []
+    for dirpath, dirnames, filenames in os.walk(FIXDIR):
+        dirnames.sort()
+        out.extend(os.path.join(dirpath, f) for f in sorted(filenames)
+                   if f.endswith(".py"))
+    return out
+
+
+def _rel(path):
+    return os.path.relpath(path, ROOT).replace(os.sep, "/")
+
+
+def _expected_markers(path):
+    marks = set()
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, start=1):
+            marks.update((m.group(1), lineno)
+                         for m in _EXPECT_RE.finditer(line))
+    return marks
+
+
+# ---------------------------------------------------------------------------
+# the corpus: exact (rule, line) agreement with the inline markers
+# ---------------------------------------------------------------------------
+
+def test_corpus_covers_every_rule():
+    marked = set()
+    for path in _fixture_files():
+        marked.update(rule for rule, _ in _expected_markers(path))
+    assert marked == {r.id for r in all_rules()}
+
+
+@pytest.mark.parametrize("path", _fixture_files(), ids=_rel)
+def test_fixture_findings_exact(path):
+    found = {(f.rule, f.line) for f in lint_file(path, _rel(path))}
+    assert found == _expected_markers(path)
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_inline_suppression_silences_one_rule(tmp_path):
+    plain = tmp_path / "plain.py"
+    plain.write_text("EMPTY = 2147483647\n")
+    assert [f.rule for f in lint_file(str(plain), "x/plain.py")] == ["PI005"]
+
+    suppressed = tmp_path / "suppressed.py"
+    suppressed.write_text(
+        "EMPTY = 2147483647  # pilint: disable=PI005 — named elsewhere\n")
+    assert lint_file(str(suppressed), "x/suppressed.py") == []
+
+
+def test_suppression_all_and_rule_mismatch(tmp_path):
+    wrong = tmp_path / "wrong.py"
+    wrong.write_text("EMPTY = 2147483647  # pilint: disable=PI004\n")
+    assert [f.rule for f in lint_file(str(wrong), "x/wrong.py")] == ["PI005"]
+
+    everything = tmp_path / "everything.py"
+    everything.write_text("EMPTY = 2147483647  # pilint: disable=all\n")
+    assert lint_file(str(everything), "x/everything.py") == []
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip
+# ---------------------------------------------------------------------------
+
+def test_baseline_roundtrip(tmp_path):
+    path = os.path.join(FIXDIR, "pi005_bad.py")
+    findings = lint_file(path, _rel(path))
+    assert findings
+
+    bp = tmp_path / "baseline.json"
+    baseline_mod.write(str(bp), findings)
+    entries = baseline_mod.load(str(bp))
+    new, grandfathered, stale = baseline_mod.diff(findings, entries)
+    assert new == [] and stale == []
+    assert len(grandfathered) == len(findings)
+
+    # fixing one finding leaves exactly one stale entry, still zero new
+    new, grandfathered, stale = baseline_mod.diff(findings[1:], entries)
+    assert new == []
+    assert len(stale) == 1 and len(grandfathered) == len(findings) - 1
+
+
+def test_baseline_fingerprints_survive_line_shifts(tmp_path):
+    path = os.path.join(FIXDIR, "pi005_bad.py")
+    rel = _rel(path)
+    baseline_entries_path = tmp_path / "baseline.json"
+    baseline_mod.write(str(baseline_entries_path), lint_file(path, rel))
+
+    with open(path, encoding="utf-8") as f:
+        shifted_src = "# a new comment shifts every line down\n" + f.read()
+    shifted = tmp_path / "shifted.py"
+    shifted.write_text(shifted_src)
+
+    # same rel → same fingerprints despite every lineno moving by one
+    new, grandfathered, stale = baseline_mod.diff(
+        lint_file(str(shifted), rel),
+        baseline_mod.load(str(baseline_entries_path)))
+    assert new == [] and stale == []
+    assert grandfathered
+
+
+def test_baseline_version_mismatch(tmp_path):
+    bp = tmp_path / "baseline.json"
+    bp.write_text(json.dumps({"version": 99, "findings": []}))
+    with pytest.raises(ValueError, match="unsupported version"):
+        baseline_mod.load(str(bp))
+
+
+# ---------------------------------------------------------------------------
+# CLI contract
+# ---------------------------------------------------------------------------
+
+def test_cli_bad_fixture_exits_1_with_json_report(tmp_path, capsys):
+    report = tmp_path / "report.json"
+    rc = pilint_main([os.path.join(FIXDIR, "pi005_bad.py"),
+                      "--no-baseline", "--json", str(report)])
+    assert rc == 1
+    payload = json.loads(report.read_text())
+    assert payload["tool"] == "pilint"
+    assert {f["rule"] for f in payload["new"]} == {"PI005"}
+    assert payload["grandfathered"] == 0
+    assert "PI005" in payload["rules"]
+    assert "PI005" in capsys.readouterr().out
+
+
+def test_cli_good_fixture_exits_0(capsys):
+    rc = pilint_main([os.path.join(FIXDIR, "pi005_good.py"),
+                      "--no-baseline"])
+    assert rc == 0
+    assert "0 new" in capsys.readouterr().out
+
+
+def test_cli_update_baseline_then_clean(tmp_path, capsys):
+    bad = os.path.join(FIXDIR, "pi005_bad.py")
+    bp = tmp_path / "baseline.json"
+    assert pilint_main([bad, "--update-baseline",
+                        "--baseline", str(bp)]) == 0
+    capsys.readouterr()
+    # every finding is now grandfathered: the gate passes
+    assert pilint_main([bad, "--baseline", str(bp)]) == 0
+    assert "0 new" in capsys.readouterr().out
+
+
+def test_cli_list_rules(capsys):
+    assert pilint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule_id in ("PI001", "PI002", "PI003", "PI004", "PI005", "PI006"):
+        assert rule_id in out
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the tree itself is clean under the committed baseline
+# ---------------------------------------------------------------------------
+
+def test_tree_is_clean(monkeypatch, capsys):
+    monkeypatch.chdir(ROOT)
+    rc = pilint_main(["src", "--baseline", "pilint-baseline.json"])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "0 new" in out
+
+
+# ---------------------------------------------------------------------------
+# trace_guard runtime half (PI002's counterpart)
+# ---------------------------------------------------------------------------
+
+def test_trace_guard_expect_and_message():
+    g = TraceGuard("unit.test")
+    base = g.count()
+    g.bump()
+    g.expect(base, 1, "one bump")
+    with pytest.raises(AssertionError) as excinfo:
+        g.expect(base, 2, "one bump")
+    msg = str(excinfo.value)
+    assert msg.startswith("trace_guard[unit.test]: 1 trace(s) during "
+                          "one bump where 2 expected")
+    assert "PI002" in msg
+
+
+def test_trace_guard_registry_is_shared():
+    a = trace_guard("unit.shared")
+    b = trace_guard("unit.shared")
+    assert a is b
+    base = a.count()
+    b.bump()
+    assert a.count() == base + 1

@@ -15,6 +15,7 @@ import pytest
 
 from repro.core import (DELETE, INSERT, SEARCH, PIConfig, RefIndex, build,
                         build_sharded, rebuild)
+from repro.analysis.runtime import trace_guard
 from repro.core import index as pi_index
 from repro.pipeline import (ArrivalConfig, Collector, DispatchOverflowError,
                             Dispatcher, PendingOverflowError, PipelineMetrics,
@@ -701,8 +702,8 @@ def test_server_runs_from_one_execute_compilation():
             break
     srv.admit(reqs[4:])  # admit + lookup + complete ticks all happened
     assert done == {100, 101, 102, 103}
-    assert pi_index.execute_trace_count() - base == 1, \
-        "server ticks must share one compiled execute"
+    trace_guard("core.execute").expect(
+        base, 1, "server ticks (one shared compiled execute)")
     s = srv.pipeline_metrics.summary()
     assert s["arrivals"] == srv.queries_processed
     assert s["windows"] >= 3

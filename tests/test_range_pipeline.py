@@ -17,6 +17,7 @@ import pytest
 from faultpoints import SimulatedCrash, crash_at
 from repro.core import (INSERT, RANGE, SEARCH, PIConfig, RefIndex, build,
                         build_sharded)
+from repro.analysis.runtime import trace_guard
 from repro.core import index as pi_index
 from repro.pipeline import (ArrivalConfig, Collector, Dispatcher, Durability,
                             OverloadConfig, PipelineMetrics, WindowConfig,
@@ -185,8 +186,7 @@ def test_pipeline_ranges_match_oracle_replay_across_rebuilds():
     base = range_trace_count()
     points, ranges, n_checked = replay_windows(disp, col, ops, keys, keys2,
                                                vals, ref)
-    assert range_trace_count() - base == 1, \
-        "the serving run must compile the range executor exactly once"
+    trace_guard("pipeline.ranges").expect(base, 1, "windowed range replay")
     assert n_checked > 100
     assert met.n_rebuilds > 0, "stream too small to trigger a rebuild"
     # every RANGE arrival got a result, and it matches its window slot
@@ -347,7 +347,7 @@ def test_sharded_fanout_parity_and_oracle(rng):
                                           jnp.asarray(his), 8192)
     execute_ranges_sharded(state, jnp.asarray(ops), jnp.asarray(los),
                            jnp.asarray(his), 8192)
-    assert range_trace_count() - base == 1
+    trace_guard("pipeline.ranges").expect(base, 1, "repeated sharded call")
     cnt_1, sum_1 = execute_ranges(single, jnp.asarray(ops),
                                   jnp.asarray(los), jnp.asarray(his), 8192)
     assert np.array_equal(np.asarray(cnt_s), np.asarray(cnt_1))
